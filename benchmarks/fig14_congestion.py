@@ -1,0 +1,42 @@
+"""Paper Fig. 14: network congestion at each router input port, Nexus vs
+TIA (dense workloads omitted — fixed dataflow ⇒ minimal congestion, as in
+the paper).  Congestion proxy: head-of-line stall cycles per port.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.harness import run_all
+
+PORTS = ["N", "E", "S", "W", "INJ"]
+IRREGULAR = ["spmspm_s1", "spmspm_s2", "spmspm_s3", "spmspm_s4", "spmv",
+             "spmadd", "sddmm", "bfs", "sssp", "pagerank"]
+
+
+def main(table=None):
+    table = table or run_all()
+    print("=" * 78)
+    print("Fig. 14 — congestion (stall cycles) per input port, "
+          "Nexus relative to TIA")
+    print("=" * 78)
+    print(f"{'workload':<14}" + "".join(f"{p:>8}" for p in PORTS)
+          + f"{'total nx/tia':>14}")
+    ratios = []
+    for name in IRREGULAR:
+        e = table[name]
+        nx = np.asarray(e["archs"]["nexus"]["stall_per_port"], np.float64)
+        ti = np.asarray(e["archs"]["tia"]["stall_per_port"], np.float64)
+        rel = nx / np.maximum(ti, 1)
+        tot = nx.sum() / max(ti.sum(), 1)
+        ratios.append(tot)
+        print(f"{name:<14}" + "".join(f"{r:>8.2f}" for r in rel)
+              + f"{tot:>14.2f}")
+    print("-" * 78)
+    avg = float(np.mean(ratios))
+    print(f"mean congestion, Nexus / TIA: {avg:.2f} "
+          f"(<1 = Nexus less congested; paper: lower avg congestion)")
+    return dict(congestion_vs_tia=avg)
+
+
+if __name__ == "__main__":
+    main()

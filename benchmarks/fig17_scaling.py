@@ -1,0 +1,80 @@
+"""Paper Fig. 17: performance scaling with PE-array size (2x2 -> 8x8).
+
+Runs the same workloads on growing fabrics; near-linear scaling is the
+claim (slope flattens when the problem no longer covers the fabric).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.workloads import powerlaw_sparse, small_world_graph
+from repro.core import compiler, machine
+from repro.core.machine import MachineConfig
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench",
+                   "fig17.json")
+SIZES = [(2, 2), (4, 4), (8, 8)]
+
+
+def run(builder, cfg):
+    wl = builder(cfg)
+    res = machine.run(cfg, wl.prog, wl.static_ams, wl.amq_len, wl.mem_val,
+                      wl.mem_meta)
+    assert res.completed and wl.check(res.mem_val)
+    return res
+
+
+def main(force: bool = False):
+    if os.path.exists(OUT) and not force:
+        with open(OUT) as f:
+            data = json.load(f)
+    else:
+        rng = np.random.default_rng(5)
+        m = 128
+        a = powerlaw_sparse(m, m, rng, 0.25)
+        x = rng.integers(-3, 4, size=(m,))
+        aa = powerlaw_sparse(40, 40, rng, 0.4)
+        bb = powerlaw_sparse(40, 40, rng, 0.4)
+        rp, col = small_world_graph(96, 4, 3)
+        builders = {
+            "spmv": lambda c: compiler.build_spmv(a, x, c),
+            "spmspm": lambda c: compiler.build_spmspm(aa, bb, c),
+            "bfs": lambda c: compiler.build_bfs(rp, col, 0, c),
+        }
+        data = {}
+        for name, b in builders.items():
+            data[name] = {}
+            for (w, h) in SIZES:
+                cfg = MachineConfig(width=w, height=h, mem_words=8192,
+                                    max_cycles=400_000)
+                r = run(b, cfg)
+                data[name][f"{w}x{h}"] = dict(
+                    cycles=r.cycles, utilization=r.utilization)
+        os.makedirs(os.path.dirname(OUT), exist_ok=True)
+        with open(OUT, "w") as f:
+            json.dump(data, f, indent=1)
+
+    print("=" * 78)
+    print("Fig. 17 — scaling with array size (speedup over 2x2; "
+          "ideal 4x4 = 4, 8x8 = 16)")
+    print("=" * 78)
+    print(f"{'workload':<10}" + "".join(f"{w}x{h:>5}" for (w, h) in SIZES)
+          + "    utilization @8x8")
+    for name, sizes in data.items():
+        base = sizes["2x2"]["cycles"]
+        row = f"{name:<10}"
+        for (w, h) in SIZES:
+            row += f"{base / sizes[f'{w}x{h}']['cycles']:>6.1f}"
+        row += f"{100 * sizes['8x8']['utilization']:>18.0f}%"
+        print(row)
+    print("-" * 78)
+    print("scaling tracks fabric size while the problem covers it; "
+          "utilization (not problem size) is the limiter — paper §5.4")
+    return data
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Shared benchmark harness: run every workload on every architecture once,
+cache the raw numbers; the per-figure scripts format slices of this table.
+
+Results land in experiments/bench/results.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.workloads import Workload, make_all
+from repro.core import machine
+from repro.core.machine import MachineConfig
+from repro.core.metrics import POWER_MW, FREQ_HZ
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+RESULTS = os.path.join(OUT_DIR, "results.json")
+
+FABRIC_MODES = {
+    "nexus": {},
+    # TIA baselines: no in-network execution, triggered (single-issue)
+    # dispatch, and standard equal-rows data placement — the three costs
+    # the Nexus design removes (§2.2 / §3.6; Alg. 1 is a Nexus-compiler
+    # contribution the paper does not grant its baselines).
+    "tia": dict(opportunistic=False, dual_issue=False),
+    "tia_valiant": dict(opportunistic=False, dual_issue=False,
+                        valiant=True),
+}
+PLACEMENT = {"nexus": "dissimilarity", "tia": "rows", "tia_valiant": "rows"}
+
+
+def run_fabric(wl: Workload, mode: str) -> dict:
+    cfg = MachineConfig(mem_words=wl.mem_words, max_cycles=400_000,
+                        **FABRIC_MODES[mode])
+    built = wl.build(cfg, PLACEMENT[mode])
+    t0 = time.time()
+    res = machine.run(cfg, built.prog, built.static_ams, built.amq_len,
+                      built.mem_val, built.mem_meta)
+    wall = time.time() - t0
+    assert res.completed, f"{wl.name} on {mode}: no global idle"
+    assert built.check(res.mem_val), f"{wl.name} on {mode}: WRONG RESULT"
+    stall = np.asarray(res.stall_per_port)
+    return dict(
+        cycles=res.cycles, utilization=res.utilization,
+        executed=res.executed, enroute=res.enroute,
+        enroute_frac=res.enroute_frac, hops=res.hops,
+        injected=res.injected,
+        stall_total=int(stall.sum()),
+        stall_per_port=stall.sum(axis=0).tolist(),
+        per_pe_busy=np.asarray(res.per_pe_busy).tolist(),
+        wall_s=wall,
+    )
+
+
+def run_all(*, force: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    if os.path.exists(RESULTS) and not force:
+        with open(RESULTS) as f:
+            return json.load(f)
+
+    table: dict = {}
+    for wl in make_all():
+        entry: dict = {"useful_ops": wl.useful_ops,
+                       "sparsity": wl.sparsity_note, "archs": {}}
+        for mode in FABRIC_MODES:
+            r = run_fabric(wl, mode)
+            entry["archs"][mode] = r
+            if verbose:
+                print(f"  {wl.name:<12} {mode:<12} cycles={r['cycles']:>7} "
+                      f"util={r['utilization']:.2f} "
+                      f"enroute={100*r['enroute_frac']:.0f}% "
+                      f"({r['wall_s']:.1f}s)")
+        if wl.cgra is not None:
+            c = wl.cgra()
+            entry["archs"]["cgra"] = dict(
+                cycles=int(c.cycles), utilization=float(c.utilization),
+                stall_total=int(c.stall_cycles),
+                bank_conflicts=c.bank_conflict_histogram.tolist())
+            if verbose:
+                print(f"  {wl.name:<12} {'cgra':<12} cycles={c.cycles:>7} "
+                      f"util={c.utilization:.2f}")
+        if wl.systolic_cycles is not None:
+            entry["archs"]["systolic"] = dict(
+                cycles=int(wl.systolic_cycles),
+                utilization=float(min(1.0, wl.useful_ops /
+                                      (wl.systolic_cycles * 16))))
+        table[wl.name] = entry
+
+    with open(RESULTS, "w") as f:
+        json.dump(table, f, indent=1)
+    return table
+
+
+def mops(entry: dict, arch: str) -> float:
+    c = entry["archs"][arch]["cycles"]
+    return entry["useful_ops"] / (c / FREQ_HZ) / 1e6
+
+
+def mops_per_mw(entry: dict, arch: str) -> float:
+    return mops(entry, arch) / POWER_MW[arch]
+
+
+if __name__ == "__main__":
+    run_all(force=True)

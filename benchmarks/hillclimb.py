@@ -1,0 +1,89 @@
+"""Perf hillclimbing (deliverable g §Perf): hypothesis → change → re-lower →
+validate, on the three chosen cells.
+
+Each variant is a (policy, microbatch, flags) override on top of the
+baseline TRAIN_POLICY; every run re-lowers + compiles on the production
+mesh and records the three roofline terms (pair-corrected).  Results land
+in experiments/perf/<cell>__<variant>.json and the table prints
+before/after per variant.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell minitron_4b:train_4k \
+        --variant baseline --variant remat_none ...
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.launch import dryrun as dr
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+# variant name -> dict(policy=(remat, seqshard, microbatch), arch=<cfg
+# dataclass overrides>)
+VARIANTS = {
+    "baseline": {},
+    "remat_none": dict(remat="none"),
+    "remat_full": dict(remat="full"),
+    "remat_dots": dict(remat="dots"),
+    "seqshard_on": dict(seqshard=True),
+    "seqshard_off": dict(seqshard=False),
+    "mb2": dict(microbatch=2),
+    "mb4": dict(microbatch=4),
+    "mb8": dict(microbatch=8),
+    "block_causal": dict(arch=dict(block_causal=True)),
+    "bc_remat_none": dict(arch=dict(block_causal=True), remat="none"),
+    "bc_mb2": dict(arch=dict(block_causal=True), microbatch=2),
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, *, pair: bool = True):
+    base = dr.TRAIN_POLICY.get(arch, ("dots", False, 1))
+    ov = VARIANTS[variant]
+    policy = (ov.get("remat", base[0]), ov.get("seqshard", base[1]),
+              ov.get("microbatch", base[2]))
+    rec = dr.run_cell(arch, shape, False, pair=pair, save=False,
+                      policy=policy, arch_overrides=ov.get("arch"))
+    os.makedirs(OUT, exist_ok=True)
+    tag = f"{arch}__{shape}__{variant}"
+    with open(os.path.join(OUT, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def terms(rec):
+    flops = rec.get("flops_corrected", rec["flops_reported"])
+    byts = rec.get("bytes_corrected", rec["bytes_reported"])
+    coll = rec.get("coll_corrected", rec["collective_total"])
+    return rl.RooflineTerms(
+        flops=flops, hbm_bytes=byts, coll_bytes=coll,
+        coll_breakdown=rec["collective_bytes"], chips=rec["chips"],
+        model_flops=rec["model_flops"])
+
+
+def fmt(rec):
+    t = terms(rec)
+    return (f"T_comp={t.t_compute:7.3f}s T_mem={t.t_memory:7.3f}s "
+            f"T_coll={t.t_collective:7.3f}s bound={t.dominant:<10} "
+            f"useful={100*t.useful_flops_frac:5.1f}% "
+            f"roofline={100*t.mfu_bound:5.1f}%")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", action="append", default=None)
+    ap.add_argument("--no-pair", action="store_true")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    variants = args.variant or ["baseline"]
+    for v in variants:
+        rec = run_variant(arch, shape, v, pair=not args.no_pair)
+        print(f"{arch} x {shape} [{v:<12}] {fmt(rec)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Roofline table (deliverable g): reads the dry-run artifacts under
+experiments/dryrun/ and prints the three-term analysis per
+(arch × shape × mesh) — compute / memory / collective seconds, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+
+Numbers policy (see repro/launch/roofline.py docstring): XLA:CPU counts a
+while-loop body once, so scanned stacks under-report; cells run with
+``--pair`` carry loop-corrected totals (``*_corrected``) which we prefer.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch import roofline as rl
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                           f"{pattern}.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def terms_of(rec: dict) -> rl.RooflineTerms:
+    flops = rec.get("flops_corrected", rec["flops_reported"])
+    byts = rec.get("bytes_corrected", rec["bytes_reported"])
+    coll = rec.get("coll_corrected", rec["collective_total"])
+    return rl.RooflineTerms(
+        flops=flops, hbm_bytes=byts, coll_bytes=coll,
+        coll_breakdown=rec["collective_bytes"], chips=rec["chips"],
+        model_flops=rec["model_flops"])
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.1f}ms"
+
+
+def main(pattern: str = "*", *, show_breakdown: bool = False):
+    recs = load_records(pattern)
+    if not recs:
+        print(f"no dry-run artifacts match {pattern!r} under "
+              f"{DRYRUN_DIR} — run `python -m repro.launch.dryrun --all "
+              f"--pair` first")
+        return []
+    print("=" * 100)
+    print("Roofline — per (arch × shape × mesh); v5e: 197 TF/s bf16, "
+          "819 GB/s HBM, 50 GB/s ICI/link")
+    print("=" * 100)
+    print(f"{'arch':<22}{'shape':<13}{'mesh':<9}{'T_comp':>9}{'T_mem':>9}"
+          f"{'T_coll':>9}  {'bound':<8}{'useful%':>8}{'roofl%':>8}"
+          f"{'corr':>5}")
+    rows = []
+    for rec in recs:
+        t = terms_of(rec)
+        corrected = "y" if "flops_corrected" in rec else "n"
+        print(f"{rec['arch']:<22}{rec['shape']:<13}{rec['mesh']:<9}"
+              f"{fmt_s(t.t_compute)}{fmt_s(t.t_memory)}"
+              f"{fmt_s(t.t_collective)}  {t.dominant:<8}"
+              f"{100*t.useful_flops_frac:>7.1f}%"
+              f"{100*t.mfu_bound:>7.1f}%{corrected:>5}")
+        if show_breakdown:
+            bd = rec["collective_bytes"]
+            tot = max(sum(bd.values()), 1)
+            parts = ", ".join(f"{k}={v/tot:.0%}" for k, v in bd.items()
+                              if v > 0)
+            print(f"{'':>44}collectives: {parts}")
+        rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                         mesh=rec["mesh"], **t.row()))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="*")
+    ap.add_argument("--breakdown", action="store_true")
+    a = ap.parse_args()
+    main(a.pattern, show_breakdown=a.breakdown)

@@ -1,0 +1,89 @@
+"""Run every benchmark (deliverable d): one section per paper table/figure,
+plus the Pallas kernel microbench and the roofline table from the dry-run
+artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only fig11,fig13
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+SECTIONS = [
+    ("harness", "shared simulator runs (all workloads x architectures)"),
+    ("fig11", "performance vs baselines + in-network %"),
+    ("fig12", "performance-per-watt"),
+    ("fig13", "fabric utilization"),
+    ("fig14", "network congestion"),
+    ("fig16", "bandwidth vs sparsity tradeoff"),
+    ("fig17", "scaling with array size"),
+    ("table2", "throughput & power efficiency"),
+    ("kernels", "Pallas kernel correctness + occupancy"),
+    ("roofline", "dry-run roofline table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run simulations instead of using the cache")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    table = None
+    failures = []
+    for name, desc in SECTIONS:
+        if only and name not in only and name != "harness":
+            continue
+        t0 = time.time()
+        print(f"\n### {name} — {desc}\n")
+        try:
+            if name == "harness":
+                from benchmarks.harness import run_all
+                table = run_all(force=args.force, verbose=False)
+                print(f"(cached: {len(table)} workloads x up to 5 archs)")
+            elif name == "fig11":
+                from benchmarks.fig11_performance import main as f
+                f(table)
+            elif name == "fig12":
+                from benchmarks.fig12_perf_watt import main as f
+                f(table)
+            elif name == "fig13":
+                from benchmarks.fig13_utilization import main as f
+                f(table)
+            elif name == "fig14":
+                from benchmarks.fig14_congestion import main as f
+                f(table)
+            elif name == "fig16":
+                from benchmarks.fig16_bandwidth import main as f
+                f()
+            elif name == "fig17":
+                from benchmarks.fig17_scaling import main as f
+                f(force=args.force)
+            elif name == "table2":
+                from benchmarks.table2_efficiency import main as f
+                f(table)
+            elif name == "kernels":
+                from benchmarks.kernels import main as f
+                f()
+            elif name == "roofline":
+                from benchmarks.roofline import main as f
+                f()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+        print(f"[{name}: {time.time()-t0:.1f}s]")
+
+    print("\n" + "=" * 78)
+    if failures:
+        print(f"FAILED sections: {[n for n, _ in failures]}")
+        raise SystemExit(1)
+    print("all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

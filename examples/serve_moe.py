@@ -1,0 +1,32 @@
+"""Serving scenario: batched generation on a MoE arch with AM-dispatch
+expert routing (the paper's technique live in the decode path).
+
+Every decode step routes each token to its top-k experts through the same
+bucketize/steal primitives the sparse layer uses — overflow tokens are
+re-routed to under-loaded experts (opportunistic execution) instead of
+being dropped.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+import numpy as np
+
+from repro.launch.serve import serve_batch
+
+
+def main():
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(1, 500, size=(rng.integers(4, 12),))
+            for _ in range(6)]
+    print(f"serving {len(reqs)} requests on phi3.5-moe (reduced config, "
+          "16->4 experts top-2, load stealing ON)\n")
+    res = serve_batch("phi3.5-moe-42b-a6.6b", reqs, max_new_tokens=8,
+                      batch_slots=3, cache_len=128)
+    for i, o in enumerate(res.outputs):
+        print(f"  req{i} ({len(reqs[i])} prompt toks) -> "
+              f"{[int(t) for t in o]}")
+    print(f"\nprefill {res.prefill_s:.2f}s, decode {res.decode_s:.2f}s "
+          f"({res.decode_tok_s:.1f} tok/s greedy)")
+
+
+if __name__ == "__main__":
+    main()

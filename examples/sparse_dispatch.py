@@ -1,0 +1,68 @@
+"""The paper's technique at pod scale: AM dispatch over an 8-device mesh.
+
+Shards a skewed CSR matrix over 8 (placeholder) devices two ways —
+naive equal-rows vs. the paper's nnz-balanced partitioning (Alg. 1) — and
+runs the shard_map SpMV whose inner loop is the Active-Message flow:
+messages (val, col-offset) travel via all_to_all to the shard owning the
+x element (T2, data-local), products return to the row owner (T3).
+
+    PYTHONPATH=src python examples/sparse_dispatch.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax                                                     # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from repro.core.partition import nnz_balanced_rows, uniform_partition  # noqa
+from repro.sparse.dispatch import shard_csr_rows, spmv_sharded  # noqa: E402
+
+
+def powerlaw_sparse(m, n, rng, alpha=1.5):
+    a = np.zeros((m, n), dtype=np.float32)
+    for i in range(m):
+        k = min(n, max(1, int((rng.pareto(alpha) + 1) * 4)))
+        cols = rng.choice(n, size=min(k, n), replace=False)
+        a[i, cols] = rng.standard_normal(len(cols))
+    return a
+
+
+def main():
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(3)
+    m = n = 512
+    a = powerlaw_sparse(m, n, rng)
+    x = rng.standard_normal(n).astype(np.float32)
+    print(f"distributed SpMV: {m}x{n}, nnz={np.count_nonzero(a)}, "
+          f"{n_dev} devices\n")
+
+    # --- load balance: naive equal-rows vs nnz-balanced (Alg. 1) ----------
+    rowptr = np.zeros((m + 1,), np.int64)
+    rows, _ = np.nonzero(a)
+    np.add.at(rowptr, rows + 1, 1)
+    rowptr = np.cumsum(rowptr)
+    naive = uniform_partition(m, n_dev)
+    bal = nnz_balanced_rows(rowptr, n_dev).row_to_pe
+    for label, place in (("equal-rows", naive), ("nnz-balanced", bal)):
+        loads = np.array([(rowptr[1:] - rowptr[:-1])[place == s].sum()
+                          for s in range(n_dev)])
+        print(f"  {label:<14} per-device nnz: min={loads.min():>5} "
+              f"max={loads.max():>5} imbalance={loads.max()/loads.mean():.2f}x")
+
+    # --- run the AM-dispatch SpMV on the mesh ------------------------------
+    shards = shard_csr_rows(a, n_dev)
+    y = spmv_sharded(mesh, shards, x)
+    ref = a @ x
+    err = np.abs(y - ref).max()
+    print(f"\nshard_map AM-dispatch SpMV max |err| vs dense reference: "
+          f"{err:.2e}")
+    assert err < 1e-3
+    print("OK — the message (instruction+operands) moved to the data, "
+          "never the data to the instruction.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Nexus Machine core: the paper's primary contribution in JAX.
+
+* :mod:`repro.core.am` — Active Message word format (Fig. 7).
+* :mod:`repro.core.partition` — nnz-balanced / dissimilarity-aware data
+  placement (Algorithm 1).
+* :mod:`repro.core.compiler` — static compiler + runtime manager (§3.6).
+* :mod:`repro.core.machine` — cycle-level fabric simulator (`lax.scan`
+  synchronous state machine) with opportunistic in-network execution.
+* :mod:`repro.core.baselines` — systolic / generic-CGRA models; TIA and
+  TIA-Valiant are `machine` flags.
+* :mod:`repro.core.metrics` — MOPS / MOPS-per-mW / utilization accounting.
+"""
+from repro.core.machine import MachineConfig, RunResult, run  # noqa: F401

@@ -1,0 +1,772 @@
+"""Nexus Machine cycle-level simulator (paper §3, Fig. 8) — in JAX.
+
+The fabric is modeled as a *vectorized synchronous state machine*: the whole
+PE array advances one clock per call of :func:`cycle`, and a run is a jitted
+``lax.scan`` over cycles.  All state lives in fixed-shape ``int32`` arrays
+(struct-of-arrays messages, see :mod:`repro.core.am`), so the simulator is a
+pure JAX program — jit-able and vmap-able across configurations (used by the
+design-space sweeps in benchmarks/fig16/fig17).
+
+Modeled hardware (Fig. 8):
+  * W×H mesh, 5-port routers (N/E/S/W + injection), 3-deep input buffers.
+  * Turn-model (west-first) routing with *congestion-aware* adaptive choice
+    between the two permitted minimal directions (§3.3.2).
+  * ON/OFF flow control: a hop is granted only while the downstream buffer
+    has ≥ 2 free slots (T_OFF = 1, T_ON = 2).
+  * Separable allocation: one grant per output port, round-robin priority.
+  * Per-PE: decode unit (dereference + streaming modes) and a compute
+    unit (ALU) as SEPARATE single-issue units (Fig. 8b) — one memory-class
+    and one ALU-class instruction may retire per cycle; an AM queue of
+    compile-time static AMs; a pending-output FIFO into the injection
+    port; dynamic AMs have injection priority over static AMs.
+  * Opportunistic **in-network execution** (§3.1.3): an ALU-class message
+    whose operands are complete may be intercepted and executed by any idle
+    PE it traverses (``opportunistic=True``; disable to get the TIA
+    baseline, add ``valiant=True`` for TIA-Valiant).
+
+Simplifications (documented per DESIGN.md §2): single-cycle router / ALU /
+SRAM; arithmetic in int32 without 16-bit wraparound (test data is kept in
+range); off-chip refill of AM queues is modeled by the queue itself (loading
+is overlapped with execution per §3.3.3, so steady-state behaviour matches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import am
+from repro.core.am import (
+    C_DSTSEL, C_NEXT_PC, C_OP, C_OP1SEL, C_OP2SEL, C_RESSEL, C_ROTATE, CFG_F,
+    F_DST0, F_DST1, F_DST2, F_HOPS, F_OP, F_OP1, F_OP1C, F_OP2, F_OP2C, F_PC,
+    F_RES, F_RESC, F_TAG, F_VALID, F_VIA, MSG_F, OP_ADD, OP_CHECKSET, OP_DIV,
+    OP_LOAD1, OP_LOAD2, OP_MAC, OP_MAX, OP_MIN, OP_MUL, OP_NOP, OP_STORE_ADD,
+    OP_STORE_MIN, OP_STORE_SET, OP_STREAM, OP_SUB, UNSET, is_alu_op,
+    is_mem_op,
+)
+
+DEPTH = 3          # input-buffer registers per port (§3.3.2)
+PORTS = 5          # N, E, S, W, INJECT
+P_N, P_E, P_S, P_W, P_INJ = range(5)
+OUT_LOCAL = 4      # "output port" id meaning ejection to the Input NI
+# AM NIC staging queue.  Consumption at the endpoint must be unconditional to
+# preclude protocol (request–reply) deadlock — the paper relies on bubble
+# flow control + compiler placement + runtime timeouts (§3.4); we provide the
+# equivalent guarantee with a deep pending FIFO (overflow is asserted never
+# to happen) and *backpressure-throttled* stream emission (§3.3.1: "the
+# generation rate ... is determined by the backpressure signal").
+PEND_CAP = 512
+STREAM_THROTTLE = 8   # stream unit pauses while pending queue is this deep
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineConfig:
+    """Static (compile-time) machine parameters."""
+
+    width: int = 4
+    height: int = 4
+    mem_words: int = 512          # 1 KB of 16-bit words per PE (Table 1)
+    queue_cap: int = 2048         # AM-queue entries held per PE (see module doc)
+    stream_wait_cap: int = 2048   # stream-task scheduler queue (see cycle())
+    opportunistic: bool = True    # False => TIA baseline
+    valiant: bool = False         # True  => TIA-Valiant baseline
+    # Nexus dispatches the instruction carried in the message straight to
+    # the decode OR compute unit — one of each may retire per cycle.  TIA's
+    # scheduler tag-matches and its priority encoder *triggers one
+    # instruction per cycle* (§2.2: the overhead the AM design removes), so
+    # the TIA baselines run with dual_issue=False.
+    dual_issue: bool = True
+    max_cycles: int = 200_000
+
+    @property
+    def n_pes(self) -> int:
+        return self.width * self.height
+
+    def neighbor_maps(self) -> tuple[np.ndarray, np.ndarray]:
+        """(N,4) neighbor PE id per direction (or -1) and opposite-port map."""
+        n = self.n_pes
+        nbr = np.full((n, 4), -1, dtype=np.int32)
+        for p in range(n):
+            x, y = p % self.width, p // self.width
+            if y > 0:
+                nbr[p, P_N] = p - self.width
+            if x < self.width - 1:
+                nbr[p, P_E] = p + 1
+            if y < self.height - 1:
+                nbr[p, P_S] = p + self.width
+            if x > 0:
+                nbr[p, P_W] = p - 1
+        # A message leaving through N arrives on the neighbor's S port, etc.
+        opp = np.array([P_S, P_W, P_N, P_E], dtype=np.int32)
+        return nbr, opp
+
+
+class MachineState(NamedTuple):
+    """Complete fabric state (all fixed-shape int32/bool arrays)."""
+
+    buf: jnp.ndarray        # (N, 5, DEPTH, MSG_F) input-port FIFOs
+    buf_n: jnp.ndarray      # (N, 5) occupancy
+    amq: jnp.ndarray        # (N, QCAP, MSG_F) static AM queues (read-only)
+    amq_head: jnp.ndarray   # (N,)
+    amq_len: jnp.ndarray    # (N,)
+    pend: jnp.ndarray       # (N, PEND_CAP, MSG_F) output FIFO to inject port
+    pend_n: jnp.ndarray     # (N,)
+    mem_val: jnp.ndarray    # (N, MEM) local data memory (values)
+    mem_meta: jnp.ndarray   # (N, MEM, 2) per-word metadata (compiler-placed)
+    stream_on: jnp.ndarray  # (N,) bool: streaming decode active
+    stream_msg: jnp.ndarray  # (N, MSG_F) template message being streamed
+    stream_base: jnp.ndarray  # (N,) current element address
+    stream_left: jnp.ndarray  # (N,) elements remaining
+    swq: jnp.ndarray        # (N, SWQ, MSG_F) stream-task wait queue
+    swq_n: jnp.ndarray      # (N,)
+    rr: jnp.ndarray         # (N,) round-robin priority pointer
+    cycle: jnp.ndarray      # () cycle counter
+    # --- statistics -------------------------------------------------------
+    st_busy: jnp.ndarray       # (N,) cycles each PE executed/streamed
+    st_exec: jnp.ndarray       # () total instructions executed
+    st_enroute: jnp.ndarray    # () executed opportunistically en route
+    st_stall: jnp.ndarray      # (N, 5) head-of-line stall cycles per port
+    st_hops: jnp.ndarray       # () total link traversals
+    st_inj: jnp.ndarray        # () messages injected
+
+
+def init_state(cfg: MachineConfig,
+               static_ams: np.ndarray,
+               amq_len: np.ndarray,
+               mem_val: np.ndarray,
+               mem_meta: np.ndarray) -> MachineState:
+    """Build the initial state from compiler outputs.
+
+    Args:
+      static_ams: (N, QCAP, MSG_F) per-PE compiled static AMs.
+      amq_len:    (N,) number of valid entries per queue.
+      mem_val/mem_meta: initial data-memory images.
+    """
+    n = cfg.n_pes
+    z = jnp.zeros
+    return MachineState(
+        buf=z((n, PORTS, DEPTH, MSG_F), jnp.int32),
+        buf_n=z((n, PORTS), jnp.int32),
+        amq=jnp.asarray(static_ams, jnp.int32),
+        amq_head=z((n,), jnp.int32),
+        amq_len=jnp.asarray(amq_len, jnp.int32),
+        pend=z((n, PEND_CAP, MSG_F), jnp.int32),
+        pend_n=z((n,), jnp.int32),
+        mem_val=jnp.asarray(mem_val, jnp.int32),
+        mem_meta=jnp.asarray(mem_meta, jnp.int32),
+        stream_on=z((n,), jnp.bool_),
+        stream_msg=z((n, MSG_F), jnp.int32),
+        stream_base=z((n,), jnp.int32),
+        stream_left=z((n,), jnp.int32),
+        swq=z((n, cfg.stream_wait_cap, MSG_F), jnp.int32),
+        swq_n=z((n,), jnp.int32),
+        rr=z((n,), jnp.int32),
+        cycle=jnp.int32(0),
+        st_busy=z((n,), jnp.int32),
+        st_exec=jnp.int32(0),
+        st_enroute=jnp.int32(0),
+        st_stall=z((n, PORTS), jnp.int32),
+        st_hops=jnp.int32(0),
+        st_inj=jnp.int32(0),
+    )
+
+
+# ----------------------------------------------------------------------------
+# ALU
+# ----------------------------------------------------------------------------
+def _alu(op, a, b, res):
+    """Vectorized ALU (op may be any opcode; result valid for ALU-class)."""
+    div = jnp.where(b == 0, jnp.int32(0), a // jnp.where(b == 0, 1, b))
+    return jnp.select(
+        [op == OP_MUL, op == OP_ADD, op == OP_SUB, op == OP_MIN,
+         op == OP_MAX, op == OP_DIV, op == OP_MAC],
+        [a * b, a + b, a - b, jnp.minimum(a, b), jnp.maximum(a, b), div,
+         res + a * b],
+        default=jnp.int32(0),
+    )
+
+
+def _pick_one(cand: jnp.ndarray, rr: jnp.ndarray) -> jnp.ndarray:
+    """Round-robin selection of one True lane per row.
+
+    cand: (N, P) bool; rr: (N,) starting priority. Returns one-hot (N, P).
+    """
+    p = cand.shape[1]
+    prio = (jnp.arange(p)[None, :] - rr[:, None]) % p
+    score = jnp.where(cand, prio, p + 1)
+    sel = jnp.argmin(score, axis=1)
+    onehot = jax.nn.one_hot(sel, p, dtype=jnp.bool_)
+    return onehot & cand.any(axis=1)[:, None] & cand
+
+
+def _rotate_dsts(msg: jnp.ndarray) -> jnp.ndarray:
+    """R1 <- R2 <- R3 <- -1 on a (..., MSG_F) message tensor."""
+    msg = msg.at[..., F_DST0].set(msg[..., F_DST1])
+    msg = msg.at[..., F_DST1].set(msg[..., F_DST2])
+    msg = msg.at[..., F_DST2].set(-1)
+    return msg
+
+
+def _anchor_tia(nxt: jnp.ndarray, pe_ids: jnp.ndarray) -> jnp.ndarray:
+    """TIA semantics (§2.2): compute is *anchored* with the data.
+
+    An emitted ALU-class instruction executes on the emitting PE before the
+    message moves on: retarget it to self (it re-enters through the inject
+    port, paying the trigger/scheduler latency the paper attributes to TIA),
+    push the true destination down the list, and mark it with F_VIA = -2 so
+    execution knows to rotate the list back afterwards.
+    """
+    anchor = is_alu_op(nxt[..., F_OP]) & (nxt[..., F_DST0] != pe_ids) & \
+        (nxt[..., F_VALID] == 1)
+    nxt = nxt.at[..., F_DST2].set(
+        jnp.where(anchor, nxt[..., F_DST1], nxt[..., F_DST2]))
+    nxt = nxt.at[..., F_DST1].set(
+        jnp.where(anchor, nxt[..., F_DST0], nxt[..., F_DST1]))
+    nxt = nxt.at[..., F_DST0].set(jnp.where(anchor, pe_ids, nxt[..., F_DST0]))
+    nxt = nxt.at[..., F_VIA].set(jnp.where(anchor, -2, nxt[..., F_VIA]))
+    return nxt
+
+
+# ----------------------------------------------------------------------------
+# One clock cycle
+# ----------------------------------------------------------------------------
+def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
+    """Build the jit-able single-cycle transition for a compiled program.
+
+    Args:
+      prog: (P_MAX, CFG_F) replicated configuration memory (§3.3.1).
+    """
+    n, w = cfg.n_pes, cfg.width
+    nbr_np, opp_np = cfg.neighbor_maps()
+    nbr = jnp.asarray(nbr_np)          # (N,4)
+    opp = jnp.asarray(opp_np)          # (4,)
+    prog_j = jnp.asarray(prog, jnp.int32)
+    xs = jnp.arange(n, dtype=jnp.int32) % w
+    ys = jnp.arange(n, dtype=jnp.int32) // w
+    pe_ids = jnp.arange(n, dtype=jnp.int32)
+
+    def route(dest: jnp.ndarray, credit_ok: jnp.ndarray) -> jnp.ndarray:
+        """West-first turn-model output port for (N,P) dest PE ids.
+
+        credit_ok: (N,4) whether each directional output currently has
+        downstream space — used for the *adaptive* choice between the two
+        permitted minimal directions (congestion-aware, §3.3.2).
+        Returns (N,P) int32 in {0..3, OUT_LOCAL}; undefined where dest<0.
+        """
+        dx = dest % w - xs[:, None]
+        dy = dest // w - ys[:, None]
+        # permitted minimal directions under west-first:
+        #   dx<0  -> must go W first;  otherwise E (if dx>0) or N/S (if dy!=0)
+        ns = jnp.where(dy < 0, P_N, P_S)
+        east_ok = credit_ok[:, P_E][:, None]
+        ns_ok = jnp.take_along_axis(
+            credit_ok, jnp.broadcast_to(ns, dest.shape), axis=1)
+        both = (dx > 0) & (dy != 0)
+        # adaptive: among {E, N/S} prefer the one with credit; tie -> larger
+        # remaining displacement (keeps paths spread).
+        prefer_e = jnp.where(
+            east_ok & ~ns_ok, True,
+            jnp.where(~east_ok & ns_ok, False, jnp.abs(dx) >= jnp.abs(dy)))
+        port = jnp.where(
+            dx < 0, P_W,
+            jnp.where(both, jnp.where(prefer_e, P_E, ns),
+                      jnp.where(dx > 0, P_E,
+                                jnp.where(dy != 0, ns, OUT_LOCAL))))
+        return port.astype(jnp.int32)
+
+    def cycle(st: MachineState) -> MachineState:
+        heads = st.buf[:, :, 0, :]                     # (N,5,F)
+        head_v = st.buf_n > 0                          # (N,5)
+
+        # --- downstream credit (ON/OFF flow control, T_OFF=1) -------------
+        # free slots at the input buffer each directional output feeds.
+        down_n = jnp.where(
+            nbr >= 0,
+            st.buf_n[jnp.clip(nbr, 0), opp[None, :].repeat(n, 0)],
+            DEPTH)                                     # (N,4)
+        credit_ok = (nbr >= 0) & (DEPTH - down_n >= 2)
+
+        # --- route computation --------------------------------------------
+        via = heads[:, :, F_VIA]
+        dest_eff = jnp.where(via >= 0, via, heads[:, :, F_DST0])
+        out_port = route(dest_eff, credit_ok)          # (N,5)
+        at_dest = dest_eff == pe_ids[:, None]
+        # clear a reached Valiant waypoint: routing then targets DST0.
+        clear_via = head_v & (via >= 0) & at_dest
+        real_dest = heads[:, :, F_DST0] == pe_ids[:, None]
+        is_local = head_v & real_dest & (via < 0)
+
+        # --- execution selection (dual-issue, Fig. 8b) ----------------------
+        # Each PE has TWO functional units the Input NI can feed per cycle:
+        # the *decode unit* (memory-class ops: loads, stores, stream accept)
+        # and the *compute unit* (ALU-class ops) — §3.3.1 lists them as
+        # separate blocks, and the Fig. 5 cycle trace relies on a MUL and
+        # the subsequent local memory update overlapping.  The Input NI may
+        # eject *any* buffered message destined here, not only the FIFO
+        # head — this removes head-of-line blocking behind a message whose
+        # stream unit is busy, which together with the deep pending FIFO
+        # gives the forward-progress guarantee the paper gets from bubble
+        # flow control + placement/timeouts (§3.4).
+        pend_free = PEND_CAP - st.pend_n               # (N,)
+        slot_v = jnp.arange(DEPTH)[None, None, :] < st.buf_n[:, :, None]
+        all_m = st.buf                                  # (N,5,D,F)
+        opn_a = all_m[..., F_OP]                        # (N,5,D)
+        local_a = slot_v & (all_m[..., F_DST0] == pe_ids[:, None, None]) & \
+            (all_m[..., F_VIA] < 0)
+        # STREAM tasks are *always* consumable: they park in the stream-task
+        # wait queue (the TIA-style scheduler queue) until the decode unit is
+        # free, so they never clog the network (deadlock avoidance, §3.4).
+        swq_ok = st.swq_n < cfg.stream_wait_cap - 1
+        stream_a = opn_a == OP_STREAM
+        # Terminal stores emit nothing — always executable (drains the
+        # network regardless of pending back-pressure).
+        no_emit_a = (opn_a == OP_STORE_ADD) | (opn_a == OP_STORE_SET) | \
+            (stream_a & swq_ok[:, None, None])
+        mem_cand = local_a & is_mem_op(opn_a) & \
+            ((pend_free >= 1)[:, None, None] | no_emit_a) & \
+            (~stream_a | swq_ok[:, None, None])          # (N,5,D)
+        # the compute unit's output always re-enters the pending FIFO; with
+        # dual issue + stream emission up to 3 pushes/cycle, so reserve room.
+        alu_cand = local_a & is_alu_op(opn_a) & \
+            (pend_free >= 2)[:, None, None]
+        if cfg.dual_issue:
+            sel_mem3 = _pick_one(mem_cand.reshape(n, PORTS * DEPTH),
+                                 st.rr).reshape(n, PORTS, DEPTH)
+            sel_alu3 = _pick_one(alu_cand.reshape(n, PORTS * DEPTH),
+                                 st.rr + 2).reshape(n, PORTS, DEPTH)
+        else:
+            # TIA triggered dispatch: the priority encoder fires ONE ready
+            # instruction per PE per cycle (either unit).
+            sel_one = _pick_one((mem_cand | alu_cand)
+                                .reshape(n, PORTS * DEPTH),
+                                st.rr).reshape(n, PORTS, DEPTH)
+            sel_mem3 = sel_one & is_mem_op(opn_a)
+            sel_alu3 = sel_one & is_alu_op(opn_a)
+        any_alu_local = sel_alu3.any(axis=(1, 2))
+        opn = heads[:, :, F_OP]
+        if cfg.opportunistic:
+            # in-network computing: an idle compute unit intercepts a
+            # passing ALU-class message whose operands are complete (head
+            # only).  Interception happens *in the router pipeline*: the
+            # message is transformed in place and continues from its input
+            # buffer next cycle — it never takes the pend/inject detour, so
+            # the cost is exactly one stalled-hop cycle (§3.1.3, Fig. 8a).
+            head_next_op = prog_j[jnp.clip(heads[:, :, F_PC], 0,
+                                           prog_j.shape[0] - 1), C_OP]
+            icand = (head_v & ~real_dest & (via < 0) & is_alu_op(opn)
+                     & (heads[:, :, F_OP1C] == 1) & (heads[:, :, F_OP2C] == 1)
+                     & (head_next_op != OP_NOP))
+            icand &= (~any_alu_local)[:, None]
+            sel_icept = _pick_one(icand, st.rr + 1)
+        else:
+            sel_icept = jnp.zeros((n, PORTS), dtype=jnp.bool_)
+        icept3 = sel_icept[:, :, None] & (jnp.arange(DEPTH) == 0)[None, None, :]
+        sel_alu3 = sel_alu3 | icept3
+        # removal mask: locally-executed messages leave their FIFO;
+        # intercepted heads stay (transformed in place below).
+        sel_exec3 = (sel_mem3 | sel_alu3) & ~icept3
+        flat = all_m.reshape(n, PORTS * DEPTH, MSG_F)
+        msg = jnp.einsum("nkf,nk->nf", flat,
+                         sel_mem3.reshape(n, PORTS * DEPTH).astype(jnp.int32))
+        msg_alu = jnp.einsum(
+            "nkf,nk->nf", flat,
+            sel_alu3.reshape(n, PORTS * DEPTH).astype(jnp.int32))
+        was_icept = sel_icept.any(axis=1)               # (N,)
+        # heads busy this cycle (executed, or being transformed) do not
+        # request a network transit.
+        head_taken = (sel_mem3 | sel_alu3)[:, :, 0]
+        mv = sel_mem3.any(axis=(1, 2))                  # decode-unit fires
+        mv_alu = sel_alu3.any(axis=(1, 2))              # compute-unit fires
+
+        # ============== EXECUTE: DECODE UNIT (memory-class) ================
+        op = jnp.where(mv, msg[:, F_OP], OP_NOP)
+        pc = msg[:, F_PC]
+        cfg_row = prog_j[jnp.clip(pc, 0, prog_j.shape[0] - 1)]  # (N,CFG_F)
+        addr_res = jnp.clip(msg[:, F_RES], 0, cfg.mem_words - 1)
+        addr_op1 = jnp.clip(msg[:, F_OP1], 0, cfg.mem_words - 1)
+        addr_op2 = jnp.clip(msg[:, F_OP2], 0, cfg.mem_words - 1)
+        mem_r1 = jnp.take_along_axis(st.mem_val, addr_op1[:, None], 1)[:, 0]
+        mem_r2 = jnp.take_along_axis(st.mem_val, addr_op2[:, None], 1)[:, 0]
+        mem_rr = jnp.take_along_axis(st.mem_val, addr_res[:, None], 1)[:, 0]
+        meta_r = jnp.take_along_axis(
+            st.mem_meta, addr_res[:, None, None].repeat(2, 2), 1)[:, 0, :]
+
+        # -- memory writes (stores execute at the owner PE: ≤1 per PE) ------
+        do_add = mv & (op == OP_STORE_ADD)
+        do_set = mv & (op == OP_STORE_SET)
+        improved = msg[:, F_OP1] < mem_rr
+        do_min = mv & (op == OP_STORE_MIN) & improved
+        was_unset = mem_rr == UNSET
+        do_chk = mv & (op == OP_CHECKSET) & was_unset
+        new_word = jnp.where(do_add, mem_rr + msg[:, F_OP1],
+                    jnp.where(do_set | do_min | do_chk, msg[:, F_OP1], mem_rr))
+        write_mask = do_add | do_set | do_min | do_chk
+        mem_val = st.mem_val
+        mem_val = jax.vmap(
+            lambda row, a, v, m: jnp.where(m, row.at[a].set(v), row)
+        )(mem_val, addr_res, new_word, write_mask)
+
+        # -- outgoing dynamic AM construction --------------------------------
+        nxt = msg
+        nxt = nxt.at[:, F_OP].set(cfg_row[:, C_OP])
+        nxt = nxt.at[:, F_PC].set(cfg_row[:, C_NEXT_PC])
+        # LOADs fill an operand slot with the fetched word.
+        is_l1, is_l2 = op == OP_LOAD1, op == OP_LOAD2
+        nxt = nxt.at[:, F_OP1].set(jnp.where(is_l1, mem_r1, nxt[:, F_OP1]))
+        nxt = nxt.at[:, F_OP1C].set(jnp.where(is_l1, 1, nxt[:, F_OP1C]))
+        nxt = nxt.at[:, F_OP2].set(jnp.where(is_l2, mem_r2, nxt[:, F_OP2]))
+        nxt = nxt.at[:, F_OP2C].set(jnp.where(is_l2, 1, nxt[:, F_OP2C]))
+        rot = cfg_row[:, C_ROTATE] == 1
+        nxt = jnp.where(rot[:, None], _rotate_dsts(nxt), nxt)
+        nxt = nxt.at[:, F_VIA].set(-1)  # execution starts a fresh leg
+        if not cfg.opportunistic:
+            nxt = _anchor_tia(nxt, pe_ids)
+        # Conditional continuations read the stored word's metadata:
+        #   BFS: next level = Op1+1, stream the discovered vertex's adjacency
+        #   SSSP: propagate the improved distance.
+        cont = do_min | do_chk
+        nxt = nxt.at[:, F_OP1].set(jnp.where(
+            do_chk, msg[:, F_OP1] + 1,
+            jnp.where(do_min, msg[:, F_OP1], nxt[:, F_OP1])))
+        nxt = nxt.at[:, F_OP2].set(jnp.where(cont, meta_r[:, 0], nxt[:, F_OP2]))
+        nxt = nxt.at[:, F_OP2C].set(jnp.where(cont, 0, nxt[:, F_OP2C]))
+        nxt = nxt.at[:, F_DST0].set(jnp.where(cont, meta_r[:, 1], nxt[:, F_DST0]))
+        nxt = nxt.at[:, F_DST1].set(jnp.where(cont, -1, nxt[:, F_DST1]))
+        nxt = nxt.at[:, F_DST2].set(jnp.where(cont, -1, nxt[:, F_DST2]))
+
+        # Does the executed instruction emit a message?
+        terminal = (op == OP_STORE_ADD) | (op == OP_STORE_SET)
+        cond_no = ((op == OP_STORE_MIN) & ~improved) | \
+                  ((op == OP_CHECKSET) & ~was_unset)
+        starts_stream = mv & (op == OP_STREAM)
+        emits = mv & ~terminal & ~cond_no & ~starts_stream & \
+            (cfg_row[:, C_OP] != OP_NOP)
+        nxt = nxt.at[:, F_VALID].set(jnp.where(emits, 1, 0))
+
+        # ============== EXECUTE: COMPUTE UNIT (ALU-class) ==================
+        op_a = jnp.where(mv_alu, msg_alu[:, F_OP], OP_NOP)
+        cfg_row_a = prog_j[jnp.clip(msg_alu[:, F_PC], 0,
+                                    prog_j.shape[0] - 1)]
+        alu_res = _alu(op_a, msg_alu[:, F_OP1], msg_alu[:, F_OP2],
+                       msg_alu[:, F_RES])
+        nxt_a = msg_alu
+        nxt_a = nxt_a.at[:, F_OP].set(cfg_row_a[:, C_OP])
+        nxt_a = nxt_a.at[:, F_PC].set(cfg_row_a[:, C_NEXT_PC])
+        nxt_a = nxt_a.at[:, F_OP1].set(
+            jnp.where(mv_alu, alu_res, nxt_a[:, F_OP1]))
+        nxt_a = nxt_a.at[:, F_OP1C].set(
+            jnp.where(mv_alu, 1, nxt_a[:, F_OP1C]))
+        # An anchored message (F_VIA == -2, TIA mode) has executed its local
+        # ALU op: resume the pushed-down destination list by rotating.
+        anchored_exec = mv_alu & (msg_alu[:, F_VIA] == -2)
+        rot_a = (cfg_row_a[:, C_ROTATE] == 1) | anchored_exec
+        nxt_a = jnp.where(rot_a[:, None], _rotate_dsts(nxt_a), nxt_a)
+        nxt_a = nxt_a.at[:, F_VIA].set(-1)
+        if not cfg.opportunistic:
+            nxt_a = _anchor_tia(nxt_a, pe_ids)
+        emits_a = mv_alu & (cfg_row_a[:, C_OP] != OP_NOP)
+        nxt_a = nxt_a.at[:, F_VALID].set(jnp.where(emits_a, 1, 0))
+
+        # -- STREAM accept: push the stream task into the wait queue ---------
+        swq, swq_n = st.swq, st.swq_n
+        wpos = jnp.clip(swq_n, 0, cfg.stream_wait_cap - 1)
+        swq = jax.vmap(
+            lambda q, i, v, m: jnp.where(m, q.at[i].set(v), q)
+        )(swq, wpos, msg, starts_stream)
+        swq_n = swq_n + starts_stream.astype(jnp.int32)
+
+        # -- STREAM issue: an idle decode unit pops the next waiting task.
+        # Descriptor word (mem_val=base, meta0=count) at Op2 (address) — or
+        # at Res when Op2 holds a value (PageRank: Op2 carries the degree).
+        issue = (~st.stream_on) & (swq_n > 0)
+        task = swq[:, 0, :]
+        t_res = jnp.clip(task[:, F_RES], 0, cfg.mem_words - 1)
+        t_op2 = jnp.clip(task[:, F_OP2], 0, cfg.mem_words - 1)
+        desc_a = jnp.where(task[:, F_OP2C] == 1, t_res, t_op2)
+        meta_d = jnp.take_along_axis(
+            st.mem_meta, desc_a[:, None, None].repeat(2, 2), 1)[:, 0, :]
+        s_base = jnp.take_along_axis(st.mem_val, desc_a[:, None], 1)[:, 0]
+        s_cnt = meta_d[:, 0]
+        stream_on = st.stream_on | (issue & (s_cnt > 0))
+        stream_msg = jnp.where(issue[:, None], task, st.stream_msg)
+        stream_base = jnp.where(issue, s_base, st.stream_base)
+        stream_left = jnp.where(issue, s_cnt, st.stream_left)
+        swq = jnp.where(issue[:, None, None],
+                        jnp.concatenate([swq[:, 1:, :],
+                                         jnp.zeros_like(swq[:, :1, :])], 1),
+                        swq)
+        swq_n = swq_n - issue.astype(jnp.int32)
+
+        # -- push executed-output AMs into the pending FIFO ------------------
+        # (decode-unit output, then compute-unit output: ≤2 pushes/cycle)
+        pend, pend_n = st.pend, st.pend_n
+        pos = jnp.clip(pend_n, 0, PEND_CAP - 1)
+        pend = jax.vmap(
+            lambda q, i, v, m: jnp.where(m, q.at[i].set(v), q)
+        )(pend, pos, nxt, emits)
+        pend_n = pend_n + emits.astype(jnp.int32)
+        emits_a_pend = emits_a & ~was_icept      # intercepted: in-place
+        pos_a = jnp.clip(pend_n, 0, PEND_CAP - 1)
+        pend = jax.vmap(
+            lambda q, i, v, m: jnp.where(m, q.at[i].set(v), q)
+        )(pend, pos_a, nxt_a, emits_a_pend)
+        pend_n = pend_n + emits_a_pend.astype(jnp.int32)
+
+        # -- streaming decode: emit one spawned AM per cycle (backpressure-
+        # throttled, see STREAM_THROTTLE above) -------------------------------
+        can_emit = stream_on & (pend_n < STREAM_THROTTLE)
+        e_addr = jnp.clip(stream_base, 0, cfg.mem_words - 1)
+        e_val = jnp.take_along_axis(mem_val, e_addr[:, None], 1)[:, 0]
+        e_meta = jnp.take_along_axis(
+            st.mem_meta, e_addr[:, None, None].repeat(2, 2), 1)[:, 0, :]
+        t = stream_msg
+        t_cfg = prog_j[jnp.clip(t[:, F_PC], 0, prog_j.shape[0] - 1)]
+        sp = t
+        sp = sp.at[:, F_VALID].set(1)
+        sp = sp.at[:, F_OP].set(t_cfg[:, C_OP])
+        sp = sp.at[:, F_PC].set(t_cfg[:, C_NEXT_PC])
+        o1 = jnp.select(
+            [t_cfg[:, C_OP1SEL] == 1, t_cfg[:, C_OP1SEL] == 2],
+            [e_val, t[:, F_OP1] + e_val], t[:, F_OP1])
+        o2 = jnp.select(
+            [t_cfg[:, C_OP2SEL] == 1, t_cfg[:, C_OP2SEL] == 2,
+             t_cfg[:, C_OP2SEL] == 3],
+            [e_val, e_meta[:, 0] + t[:, F_OP2], e_meta[:, 0] + t[:, F_OP1]],
+            t[:, F_OP2])
+        rs = jnp.select(
+            [t_cfg[:, C_RESSEL] == 1, t_cfg[:, C_RESSEL] == 2],
+            [t[:, F_RES] + e_meta[:, 0], e_meta[:, 0]], t[:, F_RES])
+        sp = sp.at[:, F_OP1].set(o1).at[:, F_OP1C].set(1)
+        sp = sp.at[:, F_OP2].set(o2)
+        sp = sp.at[:, F_OP2C].set(jnp.where(t_cfg[:, C_OP2SEL] > 0,
+                                            (t_cfg[:, C_OP2SEL] == 1)
+                                            .astype(jnp.int32),
+                                            t[:, F_OP2C]))
+        sp = sp.at[:, F_RES].set(rs)
+        use_meta_dst = t_cfg[:, C_DSTSEL] == 1
+        rot_t = _rotate_dsts(t)
+        sp = sp.at[:, F_DST0].set(
+            jnp.where(use_meta_dst, e_meta[:, 1], rot_t[:, F_DST0]))
+        sp = sp.at[:, F_DST1].set(
+            jnp.where(use_meta_dst, t[:, F_DST1], rot_t[:, F_DST1]))
+        sp = sp.at[:, F_DST2].set(
+            jnp.where(use_meta_dst, t[:, F_DST2], rot_t[:, F_DST2]))
+        sp = sp.at[:, F_VIA].set(-1)
+        if not cfg.opportunistic:
+            sp = _anchor_tia(sp, pe_ids)
+        pos2 = jnp.clip(pend_n, 0, PEND_CAP - 1)
+        pend = jax.vmap(
+            lambda q, i, v, m: jnp.where(m, q.at[i].set(v), q)
+        )(pend, pos2, sp, can_emit)
+        pend_n = pend_n + can_emit.astype(jnp.int32)
+        stream_base = jnp.where(can_emit, stream_base + 1, stream_base)
+        stream_left = jnp.where(can_emit, stream_left - 1, stream_left)
+        stream_on = stream_on & (stream_left > 0)
+
+        # ==================== ALLOCATE & TRANSFER ==========================
+        req = head_v & ~head_taken & (out_port < 4)
+        # stalled LOCAL heads that could not execute this cycle:
+        stall_local = head_v & (out_port == OUT_LOCAL) & ~head_taken
+        grants = jnp.zeros((n, PORTS), dtype=jnp.bool_)
+        for o in range(4):  # separable output-side arbitration (unrolled)
+            cand_o = req & (out_port == o) & credit_ok[:, o][:, None]
+            g = _pick_one(cand_o, st.rr + o)
+            grants = grants | g
+        stall_net = req & ~grants
+
+        # removals: granted heads + the executed slot.  Stable compaction of
+        # each (pe, port) FIFO (≤2 removals per FIFO per cycle: one head in
+        # transit, one slot ejected).
+        removed = sel_exec3 | (grants[:, :, None]
+                               & (jnp.arange(DEPTH) == 0)[None, None, :])
+        keep = slot_v & ~removed                              # (N,5,D)
+        order = jnp.argsort(
+            jnp.where(keep, jnp.arange(DEPTH)[None, None, :], DEPTH + 1),
+            axis=2)                                           # kept first
+        buf = jnp.take_along_axis(
+            st.buf, order[..., None].repeat(MSG_F, 3), axis=2)
+        buf = jnp.where(
+            (jnp.arange(DEPTH)[None, None, :] < keep.sum(2)[..., None])
+            [..., None], buf, 0)
+        buf_n = keep.sum(axis=2).astype(jnp.int32)
+        # clear reached Valiant waypoints in-place on remaining heads.
+        popped0 = removed[:, :, 0]
+        buf = buf.at[:, :, 0, F_VIA].set(
+            jnp.where(clear_via & ~popped0, -1, buf[:, :, 0, F_VIA]))
+        # in-place interception write-back: the transformed message replaces
+        # the (un-removed, un-granted) head and routes onward next cycle.
+        icept_port = jnp.argmax(sel_icept, axis=1)      # (N,)
+        cur_head = buf[pe_ids, icept_port, 0, :]
+        buf = buf.at[pe_ids, icept_port, 0, :].set(
+            jnp.where(was_icept[:, None], nxt_a, cur_head))
+
+        # transfers: sender-side view — the message leaving each PE through
+        # each directional output port.
+        send_v = jnp.zeros((n, 4), dtype=jnp.bool_)
+        send_m = jnp.zeros((n, 4, MSG_F), dtype=jnp.int32)
+        for o in range(4):
+            sel_o = grants & (out_port == o)                  # (N,5)
+            send_v = send_v.at[:, o].set(sel_o.any(axis=1))
+            send_m = send_m.at[:, o, :].set(
+                jnp.einsum("npf,np->nf", heads, sel_o.astype(jnp.int32)))
+        # receiver-side gather: input port q of PE r is fed by neighbor
+        # nbr[r, q] transmitting through its output opp[q].  Pure gather —
+        # no duplicate-scatter hazards; ≤1 arrival per (pe, port).
+        for q in range(4):
+            s = nbr[:, q]                                     # sender id
+            o = int(opp_np[q])                                # sender output
+            has = (s >= 0) & send_v[jnp.clip(s, 0), o]
+            m_in = send_m[jnp.clip(s, 0), o, :]
+            m_in = m_in.at[:, F_HOPS].add(1)
+            pos_d = jnp.clip(buf_n[:, q], 0, DEPTH - 1)
+            cur = buf[pe_ids, q, pos_d, :]
+            buf = buf.at[pe_ids, q, pos_d, :].set(
+                jnp.where(has[:, None], m_in, cur))
+            buf_n = buf_n.at[:, q].add(has.astype(jnp.int32))
+
+        # ==================== INJECTION (AM NIC, §3.3.1) ====================
+        inj_space = buf_n[:, P_INJ] < DEPTH
+        have_dyn = pend_n > 0
+        have_stat = st.amq_head < st.amq_len
+        inj_dyn = inj_space & have_dyn
+        inj_stat = inj_space & ~have_dyn & have_stat
+        dyn_msg = pend[:, 0, :]
+        stat_msg = jnp.take_along_axis(
+            st.amq, jnp.clip(st.amq_head, 0, st.amq.shape[1] - 1)
+            [:, None, None].repeat(MSG_F, 2), 1)[:, 0, :]
+        inj_msg = jnp.where(inj_dyn[:, None], dyn_msg, stat_msg)
+        if cfg.valiant:
+            # TIA-Valiant: ROMM-style randomized *minimal-path* routing
+            # (paper cites [33, 48]) — the waypoint is drawn inside the
+            # src→dst bounding box, so each leg keeps the same per-axis
+            # direction signs and the west-first turn model stays
+            # deadlock-free.  Anchored (-2)/self messages are exempt.
+            h = (pe_ids.astype(jnp.uint32) * jnp.uint32(2654435761)
+                 + st.cycle.astype(jnp.uint32) * jnp.uint32(40503))
+            dstp = jnp.clip(inj_msg[:, F_DST0], 0)
+            dx = dstp % w - xs
+            dy = dstp // w - ys
+            rx = (h % (jnp.abs(dx).astype(jnp.uint32) + 1)).astype(jnp.int32)
+            ry = ((h >> 8) % (jnp.abs(dy).astype(jnp.uint32) + 1)) \
+                .astype(jnp.int32)
+            # West-first legality across the two legs: a waypoint with
+            # via_x > dst_x would force a W hop *after* leg 1's N/S hops —
+            # an illegal turn into W (deadlock, observed as a credit cycle).
+            # For westbound traffic pin via_x = dst_x (all W hops happen
+            # first, inside leg 1) and randomize only y; eastbound keeps
+            # full in-box randomization (no W hops at all).
+            rx = jnp.where(dx < 0, jnp.abs(dx), rx)
+            via_pe = (ys + jnp.sign(dy) * ry) * w + (xs + jnp.sign(dx) * rx)
+            eligible = (inj_msg[:, F_VIA] == -1) & \
+                (inj_msg[:, F_DST0] != pe_ids) & (via_pe != pe_ids) & \
+                (via_pe != inj_msg[:, F_DST0])
+            inj_msg = inj_msg.at[:, F_VIA].set(
+                jnp.where(eligible, via_pe, inj_msg[:, F_VIA]))
+        do_inj = inj_dyn | inj_stat
+        net_inj = do_inj
+        posi = jnp.clip(buf_n[:, P_INJ], 0, DEPTH - 1)
+        buf = jax.vmap(
+            lambda b, i, v, m: jnp.where(m, b.at[P_INJ, i].set(v), b)
+        )(buf, posi, inj_msg, net_inj)
+        buf_n = buf_n.at[:, P_INJ].add(net_inj.astype(jnp.int32))
+        # consume sources
+        pend = jnp.where(inj_dyn[:, None, None],
+                         jnp.concatenate([pend[:, 1:, :],
+                                          jnp.zeros_like(pend[:, :1, :])], 1),
+                         pend)
+        pend_n = pend_n - inj_dyn.astype(jnp.int32)
+        amq_head = st.amq_head + inj_stat.astype(jnp.int32)
+
+        # ==================== STATS =========================================
+        busy = mv | mv_alu | can_emit
+        st_busy = st.st_busy + busy.astype(jnp.int32)
+        st_exec = st.st_exec + (mv.sum() + mv_alu.sum()).astype(jnp.int32)
+        st_enroute = st.st_enroute + sel_icept.any(axis=1).sum().astype(jnp.int32)
+        st_stall = st.st_stall + (stall_net | stall_local).astype(jnp.int32)
+        st_hops = st.st_hops + grants.sum().astype(jnp.int32)
+        st_inj = st.st_inj + do_inj.sum().astype(jnp.int32)
+
+        return MachineState(
+            buf=buf, buf_n=buf_n, amq=st.amq, amq_head=amq_head,
+            amq_len=st.amq_len, pend=pend, pend_n=pend_n, mem_val=mem_val,
+            mem_meta=st.mem_meta, stream_on=stream_on, stream_msg=stream_msg,
+            stream_base=stream_base, stream_left=stream_left, swq=swq,
+            swq_n=swq_n, rr=(st.rr + 1) % PORTS, cycle=st.cycle + 1,
+            st_busy=st_busy, st_exec=st_exec, st_enroute=st_enroute,
+            st_stall=st_stall, st_hops=st_hops, st_inj=st_inj)
+
+    return cycle
+
+
+def is_idle(st: MachineState) -> jnp.ndarray:
+    """Global idle detection (§3.1.4): no work anywhere, nothing in flight."""
+    return ((st.buf_n.sum() == 0) & (st.pend_n.sum() == 0)
+            & (~st.stream_on.any()) & (st.swq_n.sum() == 0)
+            & (st.amq_head >= st.amq_len).all())
+
+
+@dataclasses.dataclass
+class RunResult:
+    cycles: int
+    mem_val: np.ndarray
+    utilization: float          # instructions issued / (cycles × N) —
+                                # useful work per PE-cycle (Fig. 13)
+    busy_frac: float            # fraction of PE-cycles with ≥1 unit active
+    per_pe_busy: np.ndarray     # (N,) busy-cycle counts (load-balance map)
+    executed: int
+    enroute: int                # opportunistically executed (Fig. 11 r-axis)
+    enroute_frac: float
+    hops: int
+    injected: int
+    stall_per_port: np.ndarray  # (N,5) congestion proxy (Fig. 14)
+    completed: bool
+
+
+def run(cfg: MachineConfig, prog: np.ndarray, static_ams: np.ndarray,
+        amq_len: np.ndarray, mem_val: np.ndarray, mem_meta: np.ndarray,
+        *, chunk: int = 512) -> RunResult:
+    """Execute until global idle (or ``cfg.max_cycles``)."""
+    st = init_state(cfg, static_ams, amq_len, mem_val, mem_meta)
+    cyc = make_cycle_fn(cfg, prog)
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def run_chunk(s):
+        def body(s, _):
+            s2 = jax.lax.cond(is_idle(s), lambda x: x, cyc, s)
+            return s2, ()
+        s, _ = jax.lax.scan(body, s, None, length=chunk)
+        return s, is_idle(s)
+
+    done = False
+    while int(st.cycle) < cfg.max_cycles:
+        st, idle = run_chunk(st)
+        if int(jnp.max(st.pend_n)) >= PEND_CAP - 2:
+            raise RuntimeError("pending-FIFO overflow: consumption guarantee "
+                               "violated (simulator invariant)")
+        if bool(idle):
+            done = True
+            break
+
+    cycles = int(st.cycle)
+    n = cfg.n_pes
+    busy = float(np.asarray(st.st_busy).sum()) / max(1, cycles * n)
+    executed = int(st.st_exec)
+    enroute = int(st.st_enroute)
+    return RunResult(
+        cycles=cycles,
+        mem_val=np.asarray(st.mem_val),
+        utilization=executed / max(1, cycles * n),
+        busy_frac=busy,
+        per_pe_busy=np.asarray(st.st_busy),
+        executed=executed,
+        enroute=enroute,
+        enroute_frac=enroute / max(1, executed),
+        hops=int(st.st_hops),
+        injected=int(st.st_inj),
+        stall_per_port=np.asarray(st.st_stall),
+        completed=done,
+    )

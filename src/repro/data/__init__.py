@@ -1,0 +1,5 @@
+from repro.data.pipeline import (MemmapTokenDataset, Prefetcher,
+                                 SyntheticTokenStream, make_pipeline)
+
+__all__ = ["SyntheticTokenStream", "MemmapTokenDataset", "Prefetcher",
+           "make_pipeline"]

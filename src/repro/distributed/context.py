@@ -1,0 +1,60 @@
+"""Mesh context for in-model sharding constraints.
+
+``lm.forward`` applies activation sharding constraints (sequence parallelism
+between blocks) only when a mesh is installed here — smoke tests on one CPU
+device never see sharding machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_MESH = None
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH = prev
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint if a mesh is active and dims divide.
+
+    axes: one mesh-axis name (or tuple of names, or None) per dim of x.
+    """
+    mesh = _MESH
+    if mesh is None:
+        return x
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import jax
+
+    fixed = []
+    for ax, dim in zip(axes, x.shape):
+        if ax is None:
+            fixed.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        names = tuple(n for n in names if n in mesh.shape)
+        if not names:
+            fixed.append(None)
+            continue
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        fixed.append(names if dim % size == 0 and dim >= size else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def batch_axes():
+    if _MESH is None:
+        return None
+    return ("pod", "data") if "pod" in _MESH.shape else ("data",)

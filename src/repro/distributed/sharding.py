@@ -1,0 +1,154 @@
+"""Parameter / activation sharding rules (DESIGN.md §5).
+
+2-D logical layout on the production mesh:
+
+  * ``data``  — FSDP/ZeRO axis: weights, gradients and optimizer state are
+    sharded here and all-gathered per layer inside the scanned block (XLA
+    SPMD inserts the gathers; latency-hidden by the scan pipeline).
+  * ``model`` — tensor-parallel axis: Megatron column/row splits, expert
+    parallelism for MoE, and the *sequence* axis of decode KV caches
+    (flash-decoding-style distributed softmax).
+  * ``pod``   — composes with ``data`` for the batch; parameters are
+    replicated across pods, gradients all-reduce hierarchically.
+
+Rules are by parameter *name* (the leaf dict key), with a divisibility
+check that silently drops an axis that does not divide the dimension
+(e.g. hubert's 504-way vocab head).  Layer-stacked params get a leading
+``None``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# name -> spec for the *trailing* dims (layer-stacking handled separately)
+_RULES_2D = {
+    # (in, out) column-parallel
+    "e": ("data", "model"),
+    "w": ("data", "model"),          # unembed / head
+    "wq": ("data", "model"), "wk": ("data", "model"),
+    "wv": ("data", "model"), "wi": ("data", "model"),
+    "wg": ("data", "model"), "wup": ("data", "model"),
+    "wqkv": ("data", "model"), "win": ("data", "model"),
+    "w1": ("data", "model"), "proj": ("data", "model"),
+    # (in, out) row-parallel
+    "wo": ("model", "data"), "wdown": ("model", "data"),
+    "wout": ("model", "data"), "w2": ("model", "data"),
+    # MLA specials
+    "wdkv": ("data", None), "wukv": (None, "model"),
+    # small / oddly-shaped
+    "wif": ("data", None), "conv": (None, "model"),
+    "router": ("data", None),
+}
+# MoE expert-stacked (E, in, out): experts over 'model' (EP)
+_RULES_3D = {
+    "wi": ("model", "data", None), "wg": ("model", "data", None),
+    "wo": ("model", None, "data"),
+}
+
+
+def _fits(axes, shape, mesh) -> tuple:
+    """Drop mesh axes that do not divide the corresponding dim."""
+    out = []
+    for ax, dim in zip(axes, shape):
+        if ax is None:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in
+                            (ax if isinstance(ax, tuple) else (ax,))]))
+        out.append(ax if dim % size == 0 else None)
+    return tuple(out)
+
+
+def spec_for(path: tuple, shape: tuple, mesh) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = path[-1]
+    nd = len(shape)
+    if nd == 1 or name in ("g", "a_log", "dt_bias"):
+        return P()
+    layered = 0
+    # vmapped layer stacks add leading axes (blocks are stacked once; moe
+    # expert dim is part of the rule)
+    base = _RULES_3D.get(name) if nd - _n_lead(path) == 3 and \
+        name in _RULES_3D else _RULES_2D.get(name)
+    if base is None:
+        base = ("data", "model") if nd >= 2 else (None,)
+    lead = nd - len(base)
+    spec = (None,) * lead + _fits(base, shape[lead:], mesh)
+    return P(*spec)
+
+
+def _n_lead(path: tuple) -> int:
+    """Stacked-layer containers contribute one leading axis."""
+    return 1 if path and path[0] in ("blocks", "mamba", "mlstm", "slstm") \
+        else 0
+
+
+def _leaf_path(kp) -> tuple:
+    out = []
+    for k in kp:
+        if hasattr(k, "key"):
+            out.append(k.key)
+    return tuple(out)
+
+
+def param_specs(params_like: Any, mesh):
+    """Pytree of PartitionSpecs matching a params(-shaped) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: spec_for(_leaf_path(kp), x.shape, mesh), params_like)
+
+
+def param_shardings(params_like: Any, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_like, mesh))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes composing the global batch dimension."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec(mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def cache_specs(caches_like: Any, mesh, *, long_context: bool = False):
+    """KV/state cache shardings (sequence over 'model'; batch over 'data';
+    long-context batch=1 shards the sequence over both axes)."""
+    seq_axes = (("data", "model") if long_context else "model")
+    batch_ax = None if long_context else "data"
+
+    def spec(kp, x) -> P:
+        path = _leaf_path(kp)
+        name = path[-1]
+        nd = len(x.shape)
+        if name in ("k", "v"):
+            # (L?, B, KV, S, hd) or (n_apps, B, KV, S, hd) or (B, KV, S, hd)
+            lead = nd - 4
+            base = (batch_ax, None, seq_axes, None)
+        elif name == "ckv" or name == "kr":
+            lead = nd - 3                     # (L?, B, S, d)
+            base = (batch_ax, seq_axes, None)
+        elif name == "h":                      # mamba state (L?,B,nh,hp,ds)
+            lead = nd - 4
+            base = (batch_ax, "model", None, None)
+        elif name == "conv":                   # (L?, B, k, di)
+            lead = nd - 3
+            base = (batch_ax, None, "model")
+        elif name == "c" and nd >= 4:          # mlstm (nm, B, H, hp, hp)
+            lead = nd - 4
+            base = (batch_ax, None, "model", None)
+        elif name == "c":                      # slstm (ns, B, D)
+            lead = nd - 2
+            base = (batch_ax, "model")
+        elif name == "n":                      # mlstm norm (nm, B, H, hp)
+            lead = nd - 3
+            base = (batch_ax, None, "model")
+        else:
+            return P()
+        return P(*((None,) * lead + _fits(base, x.shape[lead:], mesh)))
+
+    return jax.tree_util.tree_map_with_path(spec, caches_like)

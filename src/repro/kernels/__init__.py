@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §3).
+
+The paper's hot loops are sparse-tensor contractions; the TPU-native
+adaptation computes on MXU-shaped *blocks* instead of scalar AMs
+(DESIGN.md §2 "message granularity").  Three kernels:
+
+* ``bcsr_spmm`` — block-CSR × dense (the SpMV/SpMM family, Fig. 4/5): a
+  scalar-prefetch gather over block columns — the AM "move the instruction
+  to the data" becomes "stream the B tile named by the message index".
+* ``sddmm`` — block-sampled dense-dense matmul (§4.2, ViTCoD-style sparse
+  attention masks): compute only at mask-nonzero blocks.
+* ``group_matmul`` — ragged grouped matmul (MoE expert compute): the
+  bucketized AM dispatch output (capacity-padded groups) hits the MXU
+  without materializing per-expert copies.
+
+Each subpackage has ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper, auto-interpret off-TPU), ``ref.py`` (pure-jnp
+oracle).  Tests sweep shapes/dtypes against the oracles in interpret mode.
+"""
+from repro.kernels.bcsr_spmm.ops import bcsr_spmm
+from repro.kernels.group_matmul.ops import group_matmul, grouped_expert_matmul
+from repro.kernels.sddmm.ops import sddmm_blocks
+
+__all__ = ["bcsr_spmm", "sddmm_blocks", "group_matmul",
+           "grouped_expert_matmul"]

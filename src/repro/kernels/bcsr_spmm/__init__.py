@@ -1,0 +1,3 @@
+from repro.kernels.bcsr_spmm.ops import bcsr_spmm
+
+__all__ = ["bcsr_spmm"]

@@ -1,0 +1,74 @@
+"""Public jit'd wrapper for the block-CSR SpMM Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bcsr_spmm.kernel import pallas_call_bcsr
+from repro.sparse.formats import BCSR
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mb", "bm", "bn", "bk",
+                                             "interpret"))
+def _bcsr_spmm(indptr, indices, blocks, n_blocks, b, *, mb: int, bm: int,
+               bn: int, bk: int, interpret: bool):
+    bcap = blocks.shape[0]
+    lanes = jnp.arange(bcap, dtype=jnp.int32)
+    live = lanes < n_blocks
+
+    # block-row of each live block; padding lanes repeat the last live row
+    # so they never zero-init a fresh output tile.
+    row_of = jnp.clip(
+        jnp.searchsorted(indptr, lanes, side="right") - 1, 0, mb - 1)
+    last_live_row = jnp.where(n_blocks > 0,
+                              row_of[jnp.maximum(n_blocks - 1, 0)], 0)
+    row_of = jnp.where(live, row_of, last_live_row).astype(jnp.int32)
+    first = (jnp.concatenate([jnp.ones((1,), jnp.bool_),
+                              row_of[1:] != row_of[:-1]]) & live)
+    # if there are no live blocks at all, still zero-init lane 0's tile.
+    first = first.at[0].set(True)
+    first = first.astype(jnp.int32)
+
+    idx = jnp.where(live, indices, 0).astype(jnp.int32)
+    blk = jnp.where(live[:, None, None], blocks, 0)
+
+    k = b.shape[1]
+    call = pallas_call_bcsr(mb, bcap, bm, bn, bk, k // bk,
+                            interpret=interpret)
+    out = call(row_of, first, idx, blk, b)
+
+    # rows with no nonzero blocks were never visited: mask them to zero.
+    nonempty = indptr[1:] > indptr[:-1]                     # (mb,)
+    mask = jnp.repeat(nonempty, bm)[:, None]
+    return jnp.where(mask, out, 0)
+
+
+def bcsr_spmm(a: BCSR, b: jax.Array, *, bk: int = 128,
+              interpret: bool | None = None) -> jax.Array:
+    """C = A @ B with block-CSR A on the Pallas TPU kernel.
+
+    Args:
+      a: BCSR with MXU-friendly blocks (bm, bn multiples of 8/128 on real
+         TPU; any shape in interpret mode).
+      b: (n, k) dense; k padded to a multiple of ``bk`` internally.
+    Returns:
+      (m, k) f32.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = a.shape
+    bm, bn = a.block
+    mb = m // bm
+    k = b.shape[1]
+    kp = -(-k // bk) * bk
+    if kp != k:
+        b = jnp.pad(b, ((0, 0), (0, kp - k)))
+    out = _bcsr_spmm(a.indptr, a.indices, a.blocks, a.n_blocks, b,
+                     mb=mb, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:, :k]

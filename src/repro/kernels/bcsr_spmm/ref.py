@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the block-CSR SpMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bcsr_spmm_ref(indptr: jax.Array, indices: jax.Array, blocks: jax.Array,
+                  b: jax.Array, *, n_blocks: jax.Array | int | None = None
+                  ) -> jax.Array:
+    """C = A @ B for block-CSR A.
+
+    Args:
+      indptr:  (mb+1,) int32 block-row pointers.
+      indices: (bcap,) int32 block-column ids (padded).
+      blocks:  (bcap, bm, bn) block values (padding blocks must be zero or
+               ``n_blocks`` given).
+      b:       (n, k) dense right-hand side.
+    Returns:
+      (mb*bm, k) in f32.
+    """
+    bcap, bm, bn = blocks.shape
+    mb = indptr.shape[0] - 1
+    k = b.shape[1]
+    if n_blocks is not None:
+        live = jnp.arange(bcap) < n_blocks
+        blocks = jnp.where(live[:, None, None], blocks, 0)
+    row_ids = jnp.clip(
+        jnp.searchsorted(indptr, jnp.arange(bcap), side="right") - 1,
+        0, mb - 1)
+    bslice = b.reshape(-1, bn, k)[indices]                   # (bcap, bn, k)
+    part = jnp.einsum("cij,cjk->cik", blocks.astype(jnp.float32),
+                      bslice.astype(jnp.float32))
+    acc = jax.ops.segment_sum(part, row_ids, num_segments=mb)
+    return acc.reshape(mb * bm, k)

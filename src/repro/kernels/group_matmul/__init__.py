@@ -1,0 +1,4 @@
+from repro.kernels.group_matmul.ops import group_matmul, \
+    grouped_expert_matmul
+
+__all__ = ["group_matmul", "grouped_expert_matmul"]

@@ -1,0 +1,78 @@
+"""Public jit'd wrappers for the ragged grouped matmul Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.group_matmul.kernel import pallas_call_group_matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = -size % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "dk", "fk",
+                                             "interpret"))
+def _group_matmul(x, expert_of_tile, w, *, tile_m: int, dk: int, fk: int,
+                  interpret: bool):
+    t, d = x.shape
+    f = w.shape[2]
+    call = pallas_call_group_matmul(
+        t // tile_m, tile_m, dk, fk, d // dk, f // fk, interpret=interpret)
+    return call(expert_of_tile.astype(jnp.int32), x, w)
+
+
+def group_matmul(x: jax.Array, expert_of_tile: jax.Array, w: jax.Array, *,
+                 tile_m: int = 128, dk: int = 128, fk: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
+    """out[i] = x[i] @ w[expert_of_tile[i // tile_m]].
+
+    ``x`` rows must be grouped so each ``tile_m`` tile belongs to one
+    expert (the MoE dispatch's capacity padding guarantees this when the
+    capacity is a multiple of ``tile_m``).  d and f are padded internally.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    t, d = x.shape
+    assert t % tile_m == 0, (t, tile_m)
+    assert expert_of_tile.shape == (t // tile_m,)
+    f = w.shape[2]
+    xp = _pad_to(x, dk, 1)
+    wp = _pad_to(_pad_to(w, dk, 1), fk, 2)
+    out = _group_matmul(xp, expert_of_tile, wp, tile_m=tile_m, dk=dk,
+                        fk=fk, interpret=interpret)
+    return out[:, :f]
+
+
+def grouped_expert_matmul(xe: jax.Array, w: jax.Array, *,
+                          tile_m: int | None = None,
+                          interpret: bool | None = None) -> jax.Array:
+    """Bucketized MoE compute: (e, c, d) @ (e, d, f) -> (e, c, f).
+
+    The (e, c) plane flattens into expert-aligned tiles; each expert's
+    capacity ``c`` is padded up to ``tile_m`` as needed.
+    """
+    e, c, d = xe.shape
+    f = w.shape[2]
+    if tile_m is None:
+        tile_m = min(128, max(8, c))
+    cp = -(-c // tile_m) * tile_m
+    if cp != c:
+        xe = jnp.pad(xe, ((0, 0), (0, cp - c), (0, 0)))
+    tiles_per_e = cp // tile_m
+    eid = jnp.repeat(jnp.arange(e, dtype=jnp.int32), tiles_per_e)
+    out = group_matmul(xe.reshape(e * cp, d), eid, w, tile_m=tile_m,
+                       interpret=interpret)
+    return out.reshape(e, cp, f)[:, :c, :]

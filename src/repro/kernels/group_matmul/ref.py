@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the ragged grouped matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def group_matmul_ref(x: jax.Array, expert_of_tile: jax.Array,
+                     w: jax.Array, *, tile_m: int) -> jax.Array:
+    """out[i] = x[i] @ w[expert_of_tile[i // tile_m]].
+
+    Args:
+      x: (t, d) tokens, grouped so each tile of ``tile_m`` rows belongs to
+         one expert.
+      expert_of_tile: (t // tile_m,) int32.
+      w: (e, d, f).
+    Returns: (t, f) f32.
+    """
+    t, d = x.shape
+    tiles = t // tile_m
+    xt = x.reshape(tiles, tile_m, d).astype(jnp.float32)
+    wt = w[expert_of_tile].astype(jnp.float32)        # (tiles, d, f)
+    return jnp.einsum("imd,idf->imf", xt, wt).reshape(t, -1)
+
+
+def grouped_expert_matmul_ref(xe: jax.Array, w: jax.Array) -> jax.Array:
+    """Bucketized MoE compute: (e, c, d) @ (e, d, f) -> (e, c, f)."""
+    return jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                      w.astype(jnp.float32))

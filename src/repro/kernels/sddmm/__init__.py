@@ -1,0 +1,3 @@
+from repro.kernels.sddmm.ops import sddmm_blocks
+
+__all__ = ["sddmm_blocks"]

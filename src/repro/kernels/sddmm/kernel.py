@@ -1,0 +1,68 @@
+"""Block-sampled dense-dense matmul (SDDMM) Pallas kernel.
+
+The paper evaluates SDDMM with a ViTCoD-style sparse attention mask
+(§4.2).  TPU adaptation: the mask is kept at (bm, bn) *block* granularity,
+and the kernel computes only mask-nonzero blocks — the compute skipped on
+zero blocks is the sparsity win; inside a block the MXU runs dense.
+
+Each grid step (e, kt) is one AM: the prefetched block coordinates name
+which A row-panel and B column-panel to stream into VMEM; the inner kt
+loop accumulates the d (contraction) tiles into the same (bm, bn) output
+block resident in VMEM.
+
+VMEM per step: A tile (bm, dk) + B tile (dk, bn) + out (bm, bn): with
+128³ f32 that is 192 KiB.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(brow_ref, bcol_ref, a_ref, b_ref, o_ref):
+    del brow_ref, bcol_ref
+    kt = pl.program_id(1)
+
+    @pl.when(kt == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] += jnp.dot(a_ref[...].astype(jnp.float32),
+                        b_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+
+
+def pallas_call_sddmm(bcap: int, bm: int, bn: int, dk: int, d_tiles: int,
+                      *, interpret: bool):
+    grid = (bcap, d_tiles)   # contraction innermost: accumulate in VMEM
+
+    def a_map(e, kt, brow_ref, bcol_ref):
+        del bcol_ref
+        return (brow_ref[e], kt)
+
+    def b_map(e, kt, brow_ref, bcol_ref):
+        del brow_ref
+        return (kt, bcol_ref[e])
+
+    def out_map(e, kt, brow_ref, bcol_ref):
+        del brow_ref, bcol_ref, kt
+        return (e, 0, 0)
+
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, dk), a_map),
+            pl.BlockSpec((dk, bn), b_map),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), out_map),
+    )
+    return pl.pallas_call(
+        _kernel, grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((bcap, bm, bn), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )

@@ -1,0 +1,54 @@
+"""Public jit'd wrapper for the block-sampled DDMM Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sddmm.kernel import pallas_call_sddmm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "dk", "interpret"))
+def _sddmm(brow, bcol, n_blocks, a, b, *, bm: int, bn: int, dk: int,
+           interpret: bool):
+    bcap = brow.shape[0]
+    live = jnp.arange(bcap) < n_blocks
+    br = jnp.where(live, brow, 0).astype(jnp.int32)
+    bc = jnp.where(live, bcol, 0).astype(jnp.int32)
+    d = a.shape[1]
+    call = pallas_call_sddmm(bcap, bm, bn, dk, d // dk, interpret=interpret)
+    out = call(br, bc, a, b)
+    return jnp.where(live[:, None, None], out, 0)
+
+
+def sddmm_blocks(brow: jax.Array, bcol: jax.Array, a: jax.Array,
+                 b: jax.Array, *, bm: int, bn: int, dk: int = 128,
+                 n_blocks: jax.Array | int | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """Sampled dense-dense matmul at block granularity.
+
+    Args:
+      brow/bcol: (bcap,) block coordinates of the mask's nonzero blocks
+        (padding beyond ``n_blocks`` is ignored; pass n_blocks=bcap or None
+        for fully-live inputs).
+      a: (m, d) with m % bm == 0; b: (d, n) with n % bn == 0; d padded to a
+        multiple of ``dk`` internally.
+    Returns:
+      (bcap, bm, bn) f32 block values.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if n_blocks is None:
+        n_blocks = brow.shape[0]
+    d = a.shape[1]
+    dp = -(-d // dk) * dk
+    if dp != d:
+        a = jnp.pad(a, ((0, 0), (0, dp - d)))
+        b = jnp.pad(b, ((0, dp - d), (0, 0)))
+    return _sddmm(brow, bcol, jnp.asarray(n_blocks, jnp.int32), a, b,
+                  bm=bm, bn=bn, dk=dk, interpret=interpret)

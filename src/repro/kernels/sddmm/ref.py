@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the block-sampled dense-dense matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sddmm_blocks_ref(brow: jax.Array, bcol: jax.Array, a: jax.Array,
+                     b: jax.Array, *, bm: int, bn: int,
+                     n_blocks: jax.Array | int | None = None) -> jax.Array:
+    """out[e] = A[brow[e]·bm : +bm, :] @ B[:, bcol[e]·bn : +bn].
+
+    Args:
+      brow/bcol: (bcap,) int32 block coordinates of mask-nonzero blocks.
+      a: (m, d);  b: (d, n).
+    Returns:
+      (bcap, bm, bn) f32 — padding lanes (>= n_blocks) zeroed when given.
+    """
+    bcap = brow.shape[0]
+    d = a.shape[1]
+    arows = a.reshape(-1, bm, d)[brow]                      # (bcap, bm, d)
+    bcols = b.reshape(d, -1, bn).transpose(1, 0, 2)[bcol]   # (bcap, d, bn)
+    out = jnp.einsum("cmd,cdn->cmn", arows.astype(jnp.float32),
+                     bcols.astype(jnp.float32))
+    if n_blocks is not None:
+        live = jnp.arange(bcap) < n_blocks
+        out = jnp.where(live[:, None, None], out, 0)
+    return out

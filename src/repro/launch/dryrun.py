@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# --- the two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary code. -----------
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np     # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.distributed import context as dctx  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch import roofline as rl        # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm                    # noqa: E402
+from repro.serve.steps import make_decode_step, make_prefill_step  # noqa
+from repro.train.optimizer import adamw_init   # noqa: E402
+from repro.train.step import make_train_step, synth_batch  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# Per-arch distribution policy (training) — the baseline the perf loop
+# iterates on.  (remat, seq_shard_acts, microbatch)
+TRAIN_POLICY = {
+    "mistral_large_123b": ("full", True, 4),
+    "minitron_8b": ("dots", True, 1),
+    "minitron_4b": ("dots", False, 1),
+    "stablelm_3b": ("dots", False, 1),
+    "zamba2_1p2b": ("dots", False, 1),
+    "xlstm_350m": ("dots", False, 1),
+    "hubert_xlarge": ("dots", False, 1),
+    "phi35_moe_42b": ("full", True, 2),
+    "deepseek_v2_lite_16b": ("dots", True, 1),
+    "llava_next_mistral_7b": ("dots", True, 1),
+}
+
+
+def input_specs(cfg, shape_id: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    seq, batch, kind = configs.SHAPES[shape_id]
+    if kind == "train":
+        batch_tree = jax.eval_shape(lambda: synth_batch(cfg, batch, seq))
+        return {"batch": batch_tree}, kind
+    if kind == "prefill":
+        if cfg.frontend == "audio":
+            toks = jax.ShapeDtypeStruct((batch, seq, 512), jnp.bfloat16)
+            return {"frames": toks}, kind
+        toks = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        extra = {}
+        if cfg.frontend == "vision":
+            extra["patches"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_patches, cfg.d_frontend), jnp.bfloat16)
+        return {"tokens": toks, **extra}, kind
+    # decode / long: one new token against a seq-long cache
+    caches = jax.eval_shape(lambda: lm.make_caches(cfg, batch, seq))
+    toks = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"caches": caches, "tokens": toks, "index": idx}, kind
+
+
+def _ns(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch_id: str, shape_id: str, mesh, *, policy=None,
+               unroll: bool = False, n_layers_override: int | None = None,
+               microbatch_override: int | None = None,
+               arch_overrides: dict | None = None):
+    """Lower + compile one (arch × shape × mesh) cell. Returns (lowered,
+    compiled, record)."""
+    cfg = configs.get_arch(arch_id)
+    if arch_overrides:
+        cfg = dataclasses.replace(cfg, **arch_overrides)
+    seq, batch, kind = configs.SHAPES[shape_id]
+    remat, seqshard, microbatch = policy or TRAIN_POLICY.get(
+        arch_id, ("dots", False, 1))
+    if microbatch_override is not None:
+        microbatch = microbatch_override
+    if n_layers_override is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers_override)
+        if cfg.ssm is not None:
+            cfg = dataclasses.replace(
+                cfg, ssm=dataclasses.replace(cfg.ssm, attn_every=max(
+                    1, min(cfg.ssm.attn_every, cfg.n_layers))))
+    cfg = dataclasses.replace(cfg, remat=remat, seq_shard_acts=seqshard,
+                              unroll_layers=unroll)
+
+    params_s = lm.shape_params(cfg)
+    pspecs = shd.param_specs(params_s, mesh)
+    bspec = shd.batch_spec(mesh)
+    inputs, kind = input_specs(cfg, shape_id)
+
+    with dctx.use_mesh(mesh):
+        if kind == "train":
+            opt_s = jax.eval_shape(adamw_init, params_s)
+            ospecs = shd.param_specs(opt_s.m, mesh)
+            opt_spec = type(opt_s)(m=ospecs, v=ospecs, master=ospecs,
+                                   count=P())
+            bt = inputs["batch"]
+            bspecs = jax.tree.map(
+                lambda x: P(*((bspec[0],) + (None,) * (len(x.shape) - 1))),
+                bt)
+            step = make_train_step(cfg, microbatch=microbatch)
+            fn = jax.jit(
+                step,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_spec),
+                              _ns(mesh, bspecs)),
+                donate_argnums=(0, 1))
+            lowered = fn.lower(params_s, opt_s, bt)
+        elif kind == "prefill":
+            if cfg.encoder_only:
+                from repro.serve.steps import encode_step
+                step = encode_step(cfg)
+                tok_s = inputs["frames"]
+                tspec = P(bspec[0], None, None)
+            else:
+                step = make_prefill_step(cfg, cache_len=seq)
+                tok_s = inputs["tokens"]
+                tspec = P(bspec[0], None)
+            args = [params_s, tok_s]
+            specs = [pspecs, tspec]
+            if cfg.frontend == "vision":
+                args.append(inputs["patches"])
+                specs.append(P(bspec[0], None, None))
+                base_step = step
+
+                def step(params, tokens, patches):  # noqa: F811
+                    b = tokens.shape[0]
+                    caches = lm.make_caches(cfg, b, seq + cfg.n_patches)
+                    logits, caches, _ = lm.forward(
+                        params, cfg,
+                        {"tokens": tokens, "patches": patches},
+                        caches=caches, cache_index=jnp.int32(0))
+                    return logits[:, -1, :], caches
+            fn = jax.jit(step, in_shardings=tuple(_ns(mesh, s)
+                                                  for s in specs))
+            lowered = fn.lower(*args)
+        else:  # decode / long
+            long_ctx = kind == "long"
+            cspecs = shd.cache_specs(inputs["caches"], mesh,
+                                     long_context=long_ctx)
+            step = make_decode_step(cfg)
+            tok_spec = P(None, None) if long_ctx else P(bspec[0], None)
+            fn = jax.jit(
+                step,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs),
+                              NamedSharding(mesh, tok_spec),
+                              NamedSharding(mesh, P())),
+                donate_argnums=(1,))
+            lowered = fn.lower(params_s, inputs["caches"], inputs["tokens"],
+                               jnp.int32(0))
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    coll = rl.collective_bytes(txt)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec = dict(
+        arch=arch_id, shape=shape_id, kind=kind,
+        mesh="x".join(str(v) for v in mesh.shape.values()),
+        chips=chips,
+        seq=seq, batch=batch,
+        policy=dict(remat=remat, seq_shard_acts=seqshard,
+                    microbatch=microbatch, unroll=unroll,
+                    n_layers=cfg.n_layers),
+        flops_reported=float(ca.get("flops", 0.0)),
+        bytes_reported=float(ca.get("bytes accessed", 0.0)),
+        collective_bytes=coll,
+        collective_total=float(sum(coll.values())),
+        compile_s=compile_s,
+        hlo_bytes=len(txt),
+        memory=dict(
+            argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+            output_bytes=getattr(ma, "output_size_in_bytes", None),
+            temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+            alias_bytes=getattr(ma, "alias_size_in_bytes", None),
+        ),
+    )
+    return lowered, compiled, rec
+
+
+def run_cell(arch_id, shape_id, multi_pod: bool, *, pair: bool = False,
+             save: bool = True, microbatch_override=None, policy=None,
+             arch_overrides: dict | None = None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    _, compiled, rec = lower_cell(arch_id, shape_id, mesh,
+                                  microbatch_override=microbatch_override,
+                                  policy=policy,
+                                  arch_overrides=arch_overrides)
+    cfg = configs.get_arch(arch_id)
+    seq, batch, kind = configs.SHAPES[shape_id]
+    rec["model_flops"] = rl.model_flops(cfg, seq, batch, kind)
+
+    if pair:
+        # unrolled 1-layer / 2-layer compiles for loop-corrected totals
+        # (single-pod only; microbatch=1 — flops are microbatch-invariant)
+        recs = {}
+        for nl in (1, 2):
+            _, _, r = lower_cell(arch_id, shape_id, mesh, unroll=True,
+                                 n_layers_override=nl,
+                                 microbatch_override=1, policy=policy,
+                                 arch_overrides=arch_overrides)
+            recs[nl] = r
+        L = cfg.n_layers
+        rec["flops_corrected"] = rl.reconstruct_pair(
+            recs[1]["flops_reported"], recs[2]["flops_reported"], L)
+        rec["bytes_corrected"] = rl.reconstruct_pair(
+            recs[1]["bytes_reported"], recs[2]["bytes_reported"], L)
+        rec["coll_corrected"] = rl.reconstruct_pair(
+            recs[1]["collective_total"], recs[2]["collective_total"], L)
+        rec["pair"] = {str(k): dict(
+            flops=v["flops_reported"], bytes=v["bytes_reported"],
+            coll=v["collective_total"]) for k, v in recs.items()}
+
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        tag = f"{arch_id}__{shape_id}__{'multi' if multi_pod else 'single'}"
+        with open(os.path.join(OUT_DIR, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--pair", action="store_true",
+                    help="also run the unrolled 1L/2L roofline pair")
+    ap.add_argument("--microbatch", type=int, default=None)
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        for a, s, ok, why in configs.cells():
+            if ok:
+                todo.append((a, s))
+            else:
+                print(f"SKIP {a} x {s}: {why}")
+    else:
+        assert args.arch and args.shape
+        a = configs.ALIASES.get(args.arch, args.arch)
+        todo = [(a, args.shape)]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for a, s in todo:
+        for mp in meshes:
+            tag = f"{a} x {s} x {'multi' if mp else 'single'}"
+            try:
+                t0 = time.time()
+                rec = run_cell(a, s, mp, pair=args.pair and not mp,
+                               microbatch_override=args.microbatch)
+                print(f"OK   {tag}: compile={rec['compile_s']:.1f}s "
+                      f"flops={rec['flops_reported']:.3g} "
+                      f"coll={rec['collective_total']:.3g}B "
+                      f"temp={rec['memory']['temp_bytes']} "
+                      f"({time.time()-t0:.0f}s)")
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

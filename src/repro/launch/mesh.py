@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  Single pod = 16x16 = 256 chips (v5e pod);
+multi-pod adds a leading 'pod' axis.  Nothing downstream depends on
+pod == 2: the same program lowers for any pod count (the 1000+-node story
+is pod = O(100) with hierarchical gradient reduction, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"{n} devices needed, found {len(devs)} — run through "
+            f"launch/dryrun.py (sets XLA_FLAGS before jax init)")
+    return jax.make_mesh(
+        shape, axes, devices=devs[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh on whatever devices exist (tests / examples)."""
+    axes = ("data", "model")
+    n = data * model
+    return jax.make_mesh((data, model), axes, devices=jax.devices()[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

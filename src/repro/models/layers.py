@@ -1,0 +1,214 @@
+"""Core transformer layers (functional, pytree params).
+
+Conventions:
+  * all activations bf16 by default, reductions / softmax in f32;
+  * params are nested dicts; init fns mirror apply fns;
+  * attention supports train (full causal), prefill (causal, returns cache)
+    and decode (single query step against a cache);
+  * KV caches are laid out (B, n_kv, S, hd) so the sequence axis can be
+    sharded over 'model' (flash-decoding-style distributed softmax — XLA
+    inserts the psum) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(key, shape, scale=None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms --
+def rmsnorm_init(d):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r * p["g"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope --
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, pos, theta=1e6):
+    """x: (..., S, H, hd); pos: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention --
+def attn_init(key, d, n_heads, n_kv, hd):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": _init(k1, (d, n_heads * hd)),
+        "wk": _init(k2, (d, n_kv * hd)),
+        "wv": _init(k3, (d, n_kv * hd)),
+        "wo": _init(k4, (n_heads * hd, d), scale=1.0 / np.sqrt(n_heads * hd)),
+    }
+
+
+def _sdpa_block(qg, k, v, qp, *, causal, kv_len):
+    """One query block: qg (B,KV,G,C,hd) vs full K/V (B,KV,Skv,hd)."""
+    hd = qg.shape[-1]
+    skv = k.shape[2]
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = qp[:, None] >= jnp.arange(skv)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len is not None:
+        mask = jnp.arange(skv)[None, :] < jnp.reshape(kv_len, (-1, 1))
+        logits = jnp.where(mask[:, None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+
+
+def _sdpa(q, k, v, *, causal: bool, q_pos=None, kv_len=None,
+          q_chunk: int | None = 256, unroll: bool = False,
+          causal_skip: bool = False):
+    """q: (B,H,Sq,hd), k/v: (B,KV,Skv,hd) — grouped-query attention.
+
+    Long query sequences are processed in query blocks (each block computes
+    its complete softmax row against the full K — the memory-frugal
+    flash-attention dataflow).  kv_len: () live cache length (decode
+    masking).
+
+    causal_skip (beyond-paper perf lever, EXPERIMENTS.md §Perf): with
+    causal attention, query block i can only see K[: (i+1)·q_chunk] — the
+    unrolled path slices K *statically* per block, so XLA never computes
+    the masked upper half: ~(nc-1)/(2nc) of the S² FLOPs and logits bytes
+    disappear (≈47% at nc=16).
+    """
+    b, h, sq, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, hd)
+    qp = q_pos if q_pos is not None else jnp.arange(sq)
+    if q_chunk is None or sq <= q_chunk or sq % q_chunk != 0:
+        out = _sdpa_block(qg, k, v, qp, causal=causal, kv_len=kv_len)
+        return out.reshape(b, h, sq, hd).astype(v.dtype)
+    nc = sq // q_chunk
+    qb = jnp.moveaxis(qg.reshape(b, kv, g, nc, q_chunk, hd), 3, 0)
+    pb = qp.reshape(nc, q_chunk)
+    if causal_skip and causal and kv_len is None and q_pos is None:
+        outs = [
+            _sdpa_block(qb[i], k[:, :, :(i + 1) * q_chunk],
+                        v[:, :, :(i + 1) * q_chunk], pb[i], causal=True,
+                        kv_len=None)
+            for i in range(nc)]
+        out = jnp.stack(outs, 0)
+    elif unroll:
+        outs = [
+            _sdpa_block(qb[i], k, v, pb[i], causal=causal, kv_len=kv_len)
+            for i in range(nc)]
+        out = jnp.stack(outs, 0)
+    else:
+        def body(_, inp):
+            qi, pi = inp
+            return (), _sdpa_block(qi, k, v, pi, causal=causal,
+                                   kv_len=kv_len)
+        _, out = jax.lax.scan(body, (), (qb, pb))
+    out = jnp.moveaxis(out, 0, 3).reshape(b, kv, g, sq, hd)
+    return out.reshape(b, h, sq, hd).astype(v.dtype)
+
+
+def attention(p, x, *, n_heads, n_kv, hd, theta, causal=True, pos=None,
+              cache=None, cache_index=None, causal_skip=False):
+    """Returns (y, new_cache).
+
+    cache: dict(k=(B,KV,S,hd), v=...) or None; cache_index: () int32 write
+    offset for decode/prefill-append.
+    """
+    b, s, d = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, n_kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, n_kv, hd)
+    if pos is None:
+        base = 0 if cache_index is None else cache_index
+        pos = base + jnp.arange(s)
+        pos = jnp.broadcast_to(pos, (b, s))
+    q = apply_rope(q, pos, theta).transpose(0, 2, 1, 3)    # (B,H,S,hd)
+    k = apply_rope(k, pos, theta).transpose(0, 2, 1, 3)    # (B,KV,S,hd)
+    v = v.transpose(0, 2, 1, 3)
+    new_cache = None
+    if cache is not None:
+        ci = cache_index if cache_index is not None else 0
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(
+            cache["k"].dtype), (0, 0, ci, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(
+            cache["v"].dtype), (0, 0, ci, 0))
+        new_cache = {"k": ck, "v": cv}
+        # causal over absolute positions (covers prefill-append and decode)
+        o = _sdpa(q, ck, cv, causal=True, q_pos=ci + jnp.arange(s),
+                  kv_len=ci + s)
+    else:
+        o = _sdpa(q, k, v, causal=causal, causal_skip=causal_skip)
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * hd) @ p["wo"]
+    return y, new_cache
+
+
+def make_cache(b, n_kv, s, hd, dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((b, n_kv, s, hd), dtype),
+            "v": jnp.zeros((b, n_kv, s, hd), dtype)}
+
+
+# ------------------------------------------------------------------- mlps --
+def swiglu_init(key, d, f):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": _init(k1, (d, f)), "wg": _init(k2, (d, f)),
+            "wo": _init(k3, (f, d), scale=1.0 / np.sqrt(f))}
+
+
+def swiglu(p, x):
+    h = jax.nn.silu((x @ p["wg"]).astype(jnp.float32)).astype(x.dtype)
+    return (h * (x @ p["wi"])) @ p["wo"]
+
+
+def gelu_mlp_init(key, d, f):
+    k1, k2 = jax.random.split(key)
+    return {"wi": _init(k1, (d, f)),
+            "wo": _init(k2, (f, d), scale=1.0 / np.sqrt(f))}
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu((x @ p["wi"]).astype(jnp.float32)).astype(x.dtype) \
+        @ p["wo"]
+
+
+# -------------------------------------------------------------- embedding --
+def embed_init(key, v, d):
+    return {"e": _init(key, (v, d), scale=1.0)}
+
+
+def embed(p, tokens):
+    return p["e"][tokens]
+
+
+def unembed_init(key, d, v):
+    return {"w": _init(key, (d, v))}
+
+
+def unembed(p, x):
+    return (x @ p["w"]).astype(jnp.float32)
+
+
+def cross_entropy(logits, labels, mask=None):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if mask is not None:
+        return (loss * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss.mean()

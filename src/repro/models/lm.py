@@ -1,0 +1,332 @@
+"""Model assembly: one generic LM covering all ten assigned architectures.
+
+Blocks are stacked with ``lax.scan`` over layer-stacked params (one compiled
+body regardless of depth — essential for 512-device compile times) with the
+following block programs:
+
+  dense / moe / vlm / audio : [attn or MLA] + [SwiGLU | MoE | GELU-MLP]
+  hybrid (zamba2)           : Mamba-2 blocks + one *shared* attention block
+                              applied every ``ssm.attn_every`` layers (the
+                              Zamba2 shared-block design) — shared params
+                              live outside the scan.
+  ssm (xlstm)               : alternating mLSTM / sLSTM blocks.
+
+`forward` handles train/prefill/decode via an optional cache pytree; losses
+and samplers live in repro.train / repro.serve.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import context as dctx
+from repro.models import layers as L
+from repro.models import mamba2, mla, moe, multimodal, xlstm
+from repro.models.config import ArchConfig
+
+
+def _remat(fn, cfg: ArchConfig):
+    """Activation rematerialization policy on a scanned block body."""
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)       # "full": save only the carry
+
+
+def _scan_blocks(body, x, xs, cfg: ArchConfig):
+    """lax.scan over stacked layers, or an unrolled python loop (the
+    roofline pair-measurement path — cost_analysis counts loop bodies once,
+    see launch/roofline.py)."""
+    body = _remat(body, cfg)
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, x, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(n):
+        x, o = body(x, jax.tree.map(lambda t: t[i], xs))
+        outs.append(o)
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts, 0), *outs) \
+        if outs and jax.tree.leaves(outs[0]) else outs[-1] if outs else ()
+    return x, stacked
+
+
+def _constrain_acts(x, cfg: ArchConfig):
+    """Sequence-parallel residual stream: (B, S, D) -> (batch, 'model', -)."""
+    if not cfg.seq_shard_acts:
+        return x
+    baxes = dctx.batch_axes()
+    if baxes is None:
+        return x
+    return dctx.constrain(x, baxes, "model", None)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict[str, Any] = {"embed": L.embed_init(keys[0], cfg.vocab, d),
+                         "final_norm": L.rmsnorm_init(d)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.unembed_init(keys[1], d, cfg.vocab)
+
+    def stack(fn, key, n):
+        return jax.vmap(lambda k: fn(k))(jax.random.split(key, n))
+
+    if cfg.xlstm:
+        nm = (cfg.n_layers + 1) // 2
+        ns = cfg.n_layers // 2
+        p["mlstm"] = stack(lambda k: mlstm_block_init(k, cfg), keys[2], nm)
+        p["slstm"] = stack(lambda k: slstm_block_init(k, cfg), keys[3], ns)
+    elif cfg.ssm is not None:
+        p["mamba"] = stack(lambda k: mamba_block_init(k, cfg), keys[2],
+                           cfg.n_layers)
+        # Zamba2 shared attention block (single copy, reused)
+        p["shared_attn"] = {
+            "ln": L.rmsnorm_init(d),
+            "attn": L.attn_init(keys[3], d, cfg.n_heads, cfg.n_kv, cfg.hd),
+        }
+    else:
+        p["blocks"] = stack(lambda k: tfm_block_init(k, cfg), keys[2],
+                            cfg.n_layers)
+
+    if cfg.frontend == "audio":
+        p["frontend"] = multimodal.audio_frontend_init(keys[4], 512, d)
+        p["head"] = L.unembed_init(keys[5], d, cfg.vocab)
+    elif cfg.frontend == "vision":
+        p["frontend"] = multimodal.vision_connector_init(
+            keys[4], cfg.d_frontend, d)
+    return p
+
+
+def tfm_block_init(key, cfg: ArchConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    blk = {"ln1": L.rmsnorm_init(d), "ln2": L.rmsnorm_init(d)}
+    if cfg.mla is not None:
+        blk["attn"] = mla.mla_init(k1, d, cfg.n_heads, cfg.mla)
+    else:
+        blk["attn"] = L.attn_init(k1, d, cfg.n_heads, cfg.n_kv, cfg.hd)
+    if cfg.moe is not None:
+        blk["moe"] = moe.moe_init(k2, d, cfg.moe)
+    elif cfg.encoder_only:
+        blk["mlp"] = L.gelu_mlp_init(k2, d, cfg.d_ff)
+    else:
+        blk["mlp"] = L.swiglu_init(k2, d, cfg.d_ff)
+    return blk
+
+
+def mamba_block_init(key, cfg: ArchConfig):
+    k1 = key
+    return {"ln": L.rmsnorm_init(cfg.d_model),
+            "mixer": mamba2.mamba2_init(k1, cfg.d_model, cfg.ssm)}
+
+
+def mlstm_block_init(key, cfg: ArchConfig):
+    return {"ln": L.rmsnorm_init(cfg.d_model),
+            "mixer": xlstm.mlstm_init(key, cfg.d_model, cfg.n_heads)}
+
+
+def slstm_block_init(key, cfg: ArchConfig):
+    return {"ln": L.rmsnorm_init(cfg.d_model),
+            "mixer": xlstm.slstm_init(key, cfg.d_model, cfg.n_heads)}
+
+
+def shape_params(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _tfm_block(blk, x, cfg: ArchConfig, cache, ci):
+    h = L.rmsnorm(blk["ln1"], x)
+    if cfg.mla is not None:
+        a, new_cache = mla.mla_attention(
+            blk["attn"], h, n_heads=cfg.n_heads, cfg=cfg.mla,
+            theta=cfg.rope_theta, cache=cache, cache_index=ci,
+            causal_skip=cfg.block_causal)
+    else:
+        a, new_cache = L.attention(
+            blk["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv, hd=cfg.hd,
+            theta=cfg.rope_theta, causal=not cfg.encoder_only, cache=cache,
+            cache_index=ci, causal_skip=cfg.block_causal)
+    x = x + a
+    h = L.rmsnorm(blk["ln2"], x)
+    aux = None
+    if cfg.moe is not None:
+        f, aux = moe.moe_apply(blk["moe"], h, cfg.moe)
+    elif cfg.encoder_only:
+        f = L.gelu_mlp(blk["mlp"], h)
+    else:
+        f = L.swiglu(blk["mlp"], h)
+    return x + f, new_cache, aux
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch):
+    """tokens (+ modality stubs) -> (B, S, D) activations."""
+    if cfg.frontend == "audio":
+        x = multimodal.audio_frontend(params["frontend"], batch["frames"])
+    elif cfg.frontend == "vision" and "patches" in batch:
+        vis = multimodal.vision_connector(params["frontend"],
+                                          batch["patches"])
+        tok = L.embed(params["embed"], batch["tokens"])
+        x = jnp.concatenate([vis.astype(tok.dtype), tok], axis=1)
+    else:
+        # text-only path (incl. vlm decode: the vision context lives in the
+        # KV cache after prefill)
+        x = L.embed(params["embed"], batch["tokens"])
+    return x
+
+
+def forward(params, cfg: ArchConfig, batch, *, caches=None, cache_index=None):
+    """Returns (logits, new_caches, aux).
+
+    batch: {"tokens": (B,S)} (+ "frames"/"patches" for audio/vlm).
+    caches: pytree of per-layer caches (leading layer axis) or None.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    ci = cache_index
+    aux_all = []
+
+    if cfg.xlstm:
+        # xLSTM: the alternating mLSTM/sLSTM stack is grouped as two scans
+        # (one per block type — scan needs homogeneous params); block order
+        # within a recurrent stack is not observable at the systems level.
+        def mbody(x, inp):
+            blk, cch = inp
+            h = L.rmsnorm(blk["ln"], x)
+            y, nc = xlstm.mlstm_apply(blk["mixer"], h, cfg.n_heads, cache=cch)
+            return x + y, nc
+
+        def sbody(x, inp):
+            blk, cch = inp
+            h = L.rmsnorm(blk["ln"], x)
+            y, nc = xlstm.slstm_apply(blk["mixer"], h, cfg.n_heads, cache=cch)
+            return x + y, nc
+
+        mc = None if caches is None else caches["mlstm"]
+        sc = None if caches is None else caches["slstm"]
+        x, nmc = _scan_blocks(mbody, x, (params["mlstm"], mc), cfg)
+        x, nsc = _scan_blocks(sbody, x, (params["slstm"], sc), cfg)
+        new_caches = None if caches is None else {"mlstm": nmc, "slstm": nsc}
+    elif cfg.ssm is not None:
+        # Zamba2 hybrid: runs of `every` Mamba-2 layers punctuated by the
+        # *shared* attention block (shared weights, but each application has
+        # its own KV cache in decode).
+        every = cfg.ssm.attn_every
+        shared = params["shared_attn"]
+        decode = caches is not None
+        n_apps = cfg.n_layers // every
+        main = n_apps * every
+
+        def mbody(x, inp):
+            blk, cch = inp
+            h = L.rmsnorm(blk["ln"], x)
+            y, nc = mamba2.mamba2_apply(blk["mixer"], h, cfg.ssm, cache=cch)
+            return _constrain_acts(x + y, cfg), nc
+
+        def seg(t, app):  # (L, ...) -> this application's run of layers
+            return t[app * every:(app + 1) * every]
+
+        mcaches = None if caches is None else caches["mamba"]
+        new_m, new_sh = [], []
+        for app in range(n_apps):
+            run = jax.tree.map(lambda t: seg(t, app), params["mamba"])
+            crun = (None if mcaches is None
+                    else jax.tree.map(lambda t: seg(t, app), mcaches))
+            x, nmc = _scan_blocks(mbody, x, (run, crun), cfg)
+            new_m.append(nmc)
+            h = L.rmsnorm(shared["ln"], x)
+            a, nsc = L.attention(
+                shared["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                hd=cfg.hd, theta=cfg.rope_theta, causal=True,
+                cache=(None if not decode
+                       else jax.tree.map(lambda t: t[app],
+                                         caches["shared_attn"])),
+                cache_index=ci if decode else None)
+            x = x + a
+            if decode:
+                new_sh.append(nsc)
+        if main < cfg.n_layers:   # leftover mamba layers after the last app
+            tail = jax.tree.map(lambda t: t[main:], params["mamba"])
+            ctail = (None if mcaches is None
+                     else jax.tree.map(lambda t: t[main:], mcaches))
+            x, nmc = _scan_blocks(mbody, x, (tail, ctail), cfg)
+            new_m.append(nmc)
+        new_caches = None
+        if decode:
+            new_caches = {
+                "mamba": jax.tree.map(
+                    lambda *ts: jnp.concatenate(ts, axis=0), *new_m),
+                "shared_attn": jax.tree.map(
+                    lambda *ts: jnp.stack(ts, axis=0), *new_sh),
+            }
+    else:
+        def body(x, inp):
+            blk, cch = inp
+            x, nc, aux = _tfm_block(blk, x, cfg, cch, ci)
+            x = _constrain_acts(x, cfg)
+            aux_out = (aux["aux_loss"] if aux else jnp.float32(0.0))
+            return x, (nc, aux_out)
+
+        bcaches = None if caches is None else caches["blocks"]
+        x, (nbc, auxs) = _scan_blocks(body, x, (params["blocks"], bcaches),
+                                      cfg)
+        aux_all.append(auxs.mean())
+        new_caches = None if caches is None else {"blocks": nbc}
+
+    x = L.rmsnorm(params["final_norm"], x)
+    if cfg.frontend == "audio":
+        logits = L.unembed(params["head"], x)
+    elif cfg.tie_embeddings:
+        logits = (x @ params["embed"]["e"].T).astype(jnp.float32)
+    else:
+        logits = L.unembed(params["unembed"], x)
+    aux = sum(aux_all) if aux_all else jnp.float32(0.0)
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def make_caches(cfg: ArchConfig, b: int, s: int, dtype=jnp.bfloat16):
+    """Decode caches with leading layer axis (scan-compatible)."""
+    if cfg.xlstm:
+        nm = (cfg.n_layers + 1) // 2
+        ns = cfg.n_layers // 2
+        mk = xlstm.make_mlstm_cache(b, cfg.d_model, cfg.n_heads)
+        sk = xlstm.make_slstm_cache(b, cfg.d_model)
+        return {
+            "mlstm": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (nm,) + t.shape).copy(), mk),
+            "slstm": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (ns,) + t.shape).copy(), sk),
+        }
+    if cfg.ssm is not None:
+        mk = mamba2.make_mamba_cache(b, cfg.d_model, cfg.ssm, dtype)
+        n_apps = cfg.n_layers // cfg.ssm.attn_every
+        sh = L.make_cache(b, cfg.n_kv, s, cfg.hd, dtype)
+        return {
+            "mamba": jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t, (cfg.n_layers,) + t.shape).copy(), mk),
+            "shared_attn": jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t, (n_apps,) + t.shape).copy(), sh),
+        }
+    if cfg.mla is not None:
+        one = mla.make_mla_cache(b, s, cfg.mla, dtype)
+    else:
+        one = L.make_cache(b, cfg.n_kv, s, cfg.hd, dtype)
+    return {"blocks": jax.tree.map(
+        lambda t: jnp.broadcast_to(t, (cfg.n_layers,) + t.shape).copy(), one)}

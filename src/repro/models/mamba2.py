@@ -1,0 +1,149 @@
+"""Mamba-2 SSD block (arXiv:2405.21060 form, as used by Zamba2).
+
+State-space recurrence per head: H_t = a_t · H_{t-1} + x_t ⊗ B_t, with
+y_t = C_t · H_t.  Computed **chunkwise** (the SSD algorithm): quadratic
+attention-like form inside a chunk, linear recurrence across chunks — one
+``lax.scan`` step per chunk, so the TPU sees big MXU matmuls and the scan
+trip count is S/chunk, not S.
+
+Decode keeps (conv window, H) as the recurrent cache — O(1) in sequence
+length, which is what makes ``long_500k`` runnable for the hybrid/ssm archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init, rmsnorm, rmsnorm_init
+
+
+def mamba2_init(key, d, cfg):
+    di = cfg.expand * d
+    nh, ds = cfg.n_heads, cfg.d_state
+    assert di % nh == 0
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "win": _init(ks[0], (d, 2 * di + 2 * nh * ds + nh)),
+        "conv": _init(ks[1], (cfg.d_conv, di), scale=0.5),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "dnorm": rmsnorm_init(di),
+        "wout": _init(ks[2], (di, d), scale=1.0 / np.sqrt(di)),
+    }
+
+
+def _ssd_chunk_scan(xh, a, b, c, chunk):
+    """Chunkwise SSD.  xh: (B,S,nh,hp), a: (B,S,nh) decay in (0,1),
+    b/c: (B,S,nh,ds).  Returns (B,S,nh,hp)."""
+    bsz, s, nh, hp = xh.shape
+    ds = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    out_dtype = xh.dtype
+    # state recurrence in f32 (decay products underflow in bf16)
+    xh, a, b, c = (t.astype(jnp.float32) for t in (xh, a, b, c))
+    r = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xh, a, b, c = r(xh), r(a), r(b), r(c)          # (nc, B, chunk, ...)
+
+    la = jnp.log(jnp.maximum(a, 1e-8))
+    cum = jnp.cumsum(la, axis=2)                   # (nc,B,chunk,nh)
+
+    def one_chunk(carry, inp):
+        h0 = carry                                  # (B,nh,hp,ds)
+        xh_c, la_c, cum_c, b_c, c_c = inp
+        # intra-chunk (quadratic in chunk length):
+        #   y_t += C_t · Σ_{u<=t} (prod_{u<v<=t} a_v) x_u B_u^T
+        seg = cum_c[:, :, None, :] - cum_c[:, None, :, :]   # (B,t,u,nh)
+        li = jnp.tril(jnp.ones((xh_c.shape[1], xh_c.shape[1])))[None, :, :,
+                                                               None]
+        w = jnp.exp(jnp.where(li > 0, seg, -np.inf))        # decay weights
+        cb = jnp.einsum("bthn,buhn->btuh", c_c, b_c)        # (B,t,u,nh)
+        y = jnp.einsum("btuh,btuh,buhp->bthp", cb, w, xh_c)
+        # inter-chunk: contribution of the carried state
+        dec = jnp.exp(cum_c)                                # (B,t,nh)
+        y = y + jnp.einsum("bthn,bhpn,bth->bthp", c_c, h0, dec)
+        # state update for the next chunk
+        rem = jnp.exp(cum_c[:, -1:, :] - cum_c)             # decay to end
+        h1 = h0 * jnp.exp(cum_c[:, -1])[:, :, None, None] + \
+            jnp.einsum("bthp,bthn,bth->bhpn", xh_c, b_c, rem)
+        return h1, y
+
+    h0 = jnp.zeros((bsz, nh, hp, ds), jnp.float32)
+    _, ys = jax.lax.scan(one_chunk, h0, (xh, la, cum, b, c))
+    return ys.swapaxes(0, 1).reshape(bsz, s, nh, hp).astype(out_dtype)
+
+
+def _split_proj(p, x, d, cfg):
+    di = cfg.expand * d
+    nh, ds = cfg.n_heads, cfg.d_state
+    z, xin, bc, dt = jnp.split(
+        x @ p["win"], [di, 2 * di, 2 * di + 2 * nh * ds], axis=-1)
+    b, c = jnp.split(bc.reshape(*bc.shape[:-1], nh, 2 * ds), 2, axis=-1)
+    return z, xin, b, c, dt
+
+
+def mamba2_apply(p, x, cfg, *, cache=None):
+    """x: (B,S,D) -> (y, new_cache).
+
+    cache (decode): {"conv": (B, d_conv-1, di), "h": (B,nh,hp,ds)}.
+    """
+    bsz, s, d = x.shape
+    di = cfg.expand * d
+    nh, ds = cfg.n_heads, cfg.d_state
+    hp = di // nh
+    z, xin, b, c, dt = _split_proj(p, x, d, cfg)
+
+    # depthwise causal conv over the sequence
+    if cache is None:
+        pad = jnp.zeros((bsz, cfg.d_conv - 1, di), xin.dtype)
+        new_conv = None
+    else:
+        pad = cache["conv"]
+        new_conv = jnp.concatenate([pad, xin], 1)[:, -(cfg.d_conv - 1):, :]
+    xpad = jnp.concatenate([pad, xin], axis=1)
+    xc = sum(xpad[:, i:i + s, :] * p["conv"][i]
+             for i in range(cfg.d_conv))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, None] * dt)           # decay
+    xh = (xc.reshape(bsz, s, nh, hp)
+          * dt[..., None].astype(x.dtype))                       # dt·x
+    bmat = b.astype(x.dtype)
+    cmat = c.astype(x.dtype)
+
+    if cache is None:
+        y = _ssd_chunk_scan(xh, a, bmat, cmat, min(cfg.chunk, s))
+        new_cache = None
+    else:
+        # decode: exact recurrence, one step at a time (s is tiny)
+        h = cache["h"].astype(jnp.float32)
+
+        def step(h, inp):
+            xh_t, a_t, b_t, c_t = inp
+            h = h * a_t[:, :, None, None] + \
+                jnp.einsum("bhp,bhn->bhpn", xh_t.astype(jnp.float32),
+                           b_t.astype(jnp.float32))
+            y_t = jnp.einsum("bhn,bhpn->bhp", c_t.astype(jnp.float32), h)
+            return h, y_t
+
+        h, ys = jax.lax.scan(
+            step, h, (xh.swapaxes(0, 1), a.swapaxes(0, 1),
+                      bmat.swapaxes(0, 1), cmat.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1).astype(x.dtype)
+        new_cache = {"conv": new_conv, "h": h.astype(cache["h"].dtype)}
+
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(p["dnorm"], y) * jax.nn.silu(z.astype(jnp.float32)) \
+        .astype(x.dtype)
+    return y @ p["wout"], new_cache
+
+
+def make_mamba_cache(bsz, d, cfg, dtype=jnp.bfloat16):
+    di = cfg.expand * d
+    # SSD state kept in f32 (decay products underflow in bf16)
+    return {"conv": jnp.zeros((bsz, cfg.d_conv - 1, di), dtype),
+            "h": jnp.zeros((bsz, cfg.n_heads, di // cfg.n_heads,
+                            cfg.d_state), jnp.float32)}

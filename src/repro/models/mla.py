@@ -1,0 +1,96 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a ``kv_lora``-dim latent c_kv plus a shared RoPE key;
+the decode cache stores only (c_kv, k_rope) — the memory win MLA exists for.
+DeepSeek-V2-*Lite* uses no query compression (q_lora_rank = None), which is
+what we implement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init, apply_rope
+
+
+def mla_init(key, d, n_heads, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    qd = cfg.nope_dim + cfg.rope_dim
+    return {
+        "wq": _init(k1, (d, n_heads * qd)),
+        # down-projection: latent c_kv + shared rope key
+        "wdkv": _init(k2, (d, cfg.kv_lora + cfg.rope_dim)),
+        # up-projection: per-head nope key + value
+        "wukv": _init(k3, (cfg.kv_lora, n_heads * (cfg.nope_dim + cfg.v_dim))),
+        "wo": _init(k4, (n_heads * cfg.v_dim, d),
+                    scale=1.0 / np.sqrt(n_heads * cfg.v_dim)),
+    }
+
+
+def _mla_scores_block(qn, qr, k_nope, kr, v, qp, skv, nd, rd):
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", qn.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", qr.astype(jnp.float32),
+                           kr.astype(jnp.float32))) / np.sqrt(nd + rd)
+    mask = qp[:, None] >= jnp.arange(skv)[None, :]
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+
+
+def mla_attention(p, x, *, n_heads, cfg, theta, causal=True, cache=None,
+                  cache_index=None, causal_skip=False):
+    """Returns (y, new_cache); cache = {ckv: (B,S,kv_lora), kr: (B,S,rope)}."""
+    b, s, d = x.shape
+    nd, rd, vd = cfg.nope_dim, cfg.rope_dim, cfg.v_dim
+    q = (x @ p["wq"]).reshape(b, s, n_heads, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    dkv = x @ p["wdkv"]
+    ckv, kr = dkv[..., :cfg.kv_lora], dkv[..., cfg.kv_lora:]
+    ci = cache_index if cache_index is not None else 0
+    pos = ci + jnp.arange(s)
+    q_rope = apply_rope(q_rope, jnp.broadcast_to(pos, (b, s)), theta)
+    kr = apply_rope(kr[:, :, None, :],
+                    jnp.broadcast_to(pos, (b, s)), theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, ci, 0))
+        kr_all = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, ci, 0))
+        new_cache = {"ckv": ckv_all, "kr": kr_all}
+    else:
+        ckv_all, kr_all = ckv, kr
+    skv = ckv_all.shape[1]
+
+    # expand latent to per-head keys/values (recomputed from the compressed
+    # cache — the MLA trade: extra matmul for 8-16x less cache memory)
+    ukv = (ckv_all @ p["wukv"]).reshape(b, skv, n_heads, nd + vd)
+    k_nope, v = ukv[..., :nd], ukv[..., nd:]
+    qp = pos
+
+    q_chunk = 256
+    if causal_skip and cache is None and s % q_chunk == 0 and s > q_chunk:
+        # block-causal skip (see layers._sdpa): query block i statically
+        # attends to K[: (i+1)·q_chunk] — the masked upper half of the S²
+        # score matrix is never computed.
+        nc = s // q_chunk
+        outs = []
+        for i in range(nc):
+            lo, hi = i * q_chunk, (i + 1) * q_chunk
+            outs.append(_mla_scores_block(
+                q_nope[:, lo:hi], q_rope[:, lo:hi], k_nope[:, :hi],
+                kr_all[:, :hi], v[:, :hi], qp[lo:hi], hi, nd, rd))
+        o = jnp.concatenate(outs, axis=1)
+    else:
+        o = _mla_scores_block(q_nope, q_rope, k_nope, kr_all, v, qp, skv,
+                              nd, rd)
+    y = o.reshape(b, s, n_heads * vd).astype(x.dtype) @ p["wo"]
+    return y, new_cache
+
+
+def make_mla_cache(b, s, cfg, dtype=jnp.bfloat16):
+    return {"ckv": jnp.zeros((b, s, cfg.kv_lora), dtype),
+            "kr": jnp.zeros((b, s, cfg.rope_dim), dtype)}

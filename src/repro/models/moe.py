@@ -1,0 +1,105 @@
+"""Mixture-of-Experts with Active-Message dispatch (the paper's technique
+as a first-class MoE feature — DESIGN.md §2, §4).
+
+Token→expert routing *is* AM routing: each token is a message whose
+destination is the expert owning the weights (data-local execution), the
+static capacity is the router buffer, and **opportunistic load stealing**
+(paper §3.1.3) re-routes overflow tokens to the least-loaded experts instead
+of dropping them — idle experts pick up en-route work.  Dispatch reuses
+:func:`repro.sparse.dispatch.bucketize` — the same primitive that routes
+sparse-matrix AMs.
+
+Expert→device placement uses the Alg.-1 balance objective
+(:func:`repro.core.partition.expert_placement`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import context as dctx
+from repro.models.layers import _init, swiglu
+from repro.sparse.dispatch import bucketize, steal_overflow, unbucketize
+
+
+def moe_init(key, d, cfg):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": _init(k1, (d, cfg.n_experts), dtype=jnp.float32),
+        "wi": _init(k2, (cfg.n_experts, d, cfg.d_expert)),
+        "wg": _init(k3, (cfg.n_experts, d, cfg.d_expert)),
+        "wo": _init(k4, (cfg.n_experts, cfg.d_expert, d),
+                    scale=1.0 / np.sqrt(cfg.d_expert)),
+    }
+    if cfg.n_shared:
+        ks = jax.random.split(k5, 3)
+        f = cfg.n_shared * max(cfg.d_shared, 1)
+        p["shared"] = {"wi": _init(ks[0], (d, f)), "wg": _init(ks[1], (d, f)),
+                       "wo": _init(ks[2], (f, d), scale=1.0 / np.sqrt(f))}
+    return p
+
+
+def moe_apply(p, x, cfg, *, deterministic_capacity: int | None = None):
+    """x: (B, S, D) -> (y, aux) with aux = load-balancing stats/loss.
+
+    Static shapes throughout: tokens are bucketized per expert with capacity
+    C = ceil(T*k/E * capacity_factor); overflow is re-routed (load_steal) or
+    dropped (the CGRA-baseline behaviour), never dynamic.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, choice = jax.lax.top_k(probs, k)                   # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = deterministic_capacity or int(
+        np.ceil(t * k / e * cfg.capacity_factor))
+    dest = choice.reshape(t * k).astype(jnp.int32)           # flat messages
+    if cfg.load_steal:
+        load = jax.ops.segment_sum(jnp.ones_like(dest), dest, num_segments=e)
+        dest = steal_overflow(dest, load, cap)
+        # gates follow the message: a stolen token is weighted by the
+        # router's probability for the expert that actually serves it.
+        gate = jnp.take_along_axis(
+            probs, dest.reshape(t, k), axis=-1)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    idx, valid, rank, kept = bucketize(dest, e, cap)         # AM buckets
+
+    tok_of_slot = idx // k                                   # (E, C)
+    xe = jnp.where(valid[..., None], xt[tok_of_slot], 0)     # (E, C, D)
+    # SPMD sharding of the dispatch buffers (§Perf, EXPERIMENTS.md): the
+    # expert dim lives on 'model' (EP) and the *capacity* dim on 'data' —
+    # without the C constraint every device materializes and computes the
+    # GLOBAL token buffer per local expert (observed: 16x duplicated expert
+    # FLOPs on the 16x16 mesh).  The slot gather across data shards is the
+    # AM all-to-all (instruction+operands travel to the expert's shard).
+    xe = dctx.constrain(xe, "model", "data", None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    h = dctx.constrain(h, "model", "data", None)
+    h = h * dctx.constrain(jnp.einsum("ecd,edf->ecf", xe, p["wi"]),
+                           "model", "data", None)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])              # (E, C, D)
+    ye = dctx.constrain(ye, "model", "data", None)
+
+    back = unbucketize(ye, dest, rank, kept)                 # (T*k, D)
+    y = (back.reshape(t, k, d) * gate[..., None].astype(x.dtype)).sum(1)
+    if "shared" in p:
+        y = y + swiglu(p["shared"], xt)
+    y = y.reshape(b, s, d)
+
+    # Switch-style aux load-balance loss + utilization stats (the paper's
+    # fabric-utilization metric, expert edition).
+    me = probs.mean(0)                                       # (T,E) mean
+    ce = jax.ops.segment_sum(jnp.ones_like(dest, jnp.float32) / (t * k),
+                             dest, num_segments=e)
+    aux_loss = e * jnp.sum(me * ce)
+    util = (ce > 0).mean()
+    dropped = 1.0 - kept.mean()
+    return y, {"aux_loss": aux_loss, "expert_util": util,
+               "dropped_frac": dropped}

@@ -1,0 +1,40 @@
+"""Modality frontend STUBS (assignment: ``[audio]``/``[vlm]`` entries specify
+the transformer BACKBONE only; the frontend supplies precomputed frame/patch
+embeddings via ``input_specs()``).
+
+* hubert-xlarge: the CNN feature extractor is stubbed — inputs are
+  precomputed 512-d frame features (the standard HuBERT frontend output),
+  projected to d_model.  Training objective: masked-frame prediction onto a
+  504-entry codebook (encoder-only).
+* llava-next: the CLIP tower is stubbed — inputs are precomputed 1024-d
+  patch embeddings for the anyres tiles, projected by the 2-layer MLP
+  connector and prepended to the token embedding sequence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init
+
+
+def audio_frontend_init(key, d_in, d_model):
+    return {"proj": _init(key, (d_in, d_model))}
+
+
+def audio_frontend(p, feats):
+    """feats: (B, S, d_in) precomputed frame features -> (B, S, D)."""
+    return feats @ p["proj"]
+
+
+def vision_connector_init(key, d_vis, d_model):
+    k1, k2 = jax.random.split(key)
+    return {"w1": _init(k1, (d_vis, d_model)),
+            "w2": _init(k2, (d_model, d_model))}
+
+
+def vision_connector(p, patches):
+    """patches: (B, P, d_vis) precomputed anyres tile embeddings."""
+    h = jax.nn.gelu((patches @ p["w1"]).astype(jnp.float32))
+    return h.astype(patches.dtype) @ p["w2"]

@@ -1,0 +1,113 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar
+memory), alternating — the 350M config has no separate FFN (d_ff = 0); the
+blocks carry their own up/down projections.
+
+The mLSTM recurrence (per head, exponential gating, stabilizer m_t):
+    C_t = f C_{t-1} + i v_t k_t^T ;  n_t = f n_{t-1} + i k_t
+    h_t = o ⊙ (C_t q_t) / max(|n_t^T q_t|, 1)
+Computed with a chunkwise scan like Mamba-2 (O(1) decode state — this is
+what makes xlstm-350m a ``long_500k``-capable arch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init, rmsnorm, rmsnorm_init
+
+
+def mlstm_init(key, d, n_heads, proj=2):
+    di = proj * d
+    ks = jax.random.split(key, 5)
+    return {
+        "wup": _init(ks[0], (d, 2 * di)),          # [x_in, gate]
+        "wqkv": _init(ks[1], (di, 3 * di)),
+        "wif": _init(ks[2], (di, 2 * n_heads), dtype=jnp.float32),
+        "norm": rmsnorm_init(di),
+        "wdown": _init(ks[3], (di, d), scale=1.0 / np.sqrt(di)),
+    }
+
+
+def mlstm_apply(p, x, n_heads, *, cache=None, proj=2):
+    b, s, d = x.shape
+    di = proj * d
+    hp = di // n_heads
+    up = x @ p["wup"]
+    xi, gate = up[..., :di], up[..., di:]
+    qkv = xi @ p["wqkv"]
+    q, k, v = [t.reshape(b, s, n_heads, hp)
+               for t in jnp.split(qkv, 3, axis=-1)]
+    k = k / np.sqrt(hp)
+    gif = (xi.astype(jnp.float32) @ p["wif"]).reshape(b, s, n_heads, 2)
+    ig = jnp.exp(-jax.nn.softplus(-gif[..., 0]))     # sigmoid, stable
+    fg = jnp.exp(-jax.nn.softplus(-gif[..., 1]))     # forget in (0,1)
+
+    def step(carry, inp):
+        c, n = carry                                  # (B,H,hp,hp),(B,H,hp)
+        q_t, k_t, v_t, i_t, f_t = inp
+        c = c * f_t[:, :, None, None] + \
+            i_t[:, :, None, None] * jnp.einsum("bhp,bhq->bhpq", v_t, k_t)
+        n = n * f_t[:, :, None] + i_t[:, :, None] * k_t
+        num = jnp.einsum("bhpq,bhq->bhp", c, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n, q_t)), 1.0)
+        return (c, n), num / den[:, :, None]
+
+    if cache is None:
+        c0 = jnp.zeros((b, n_heads, hp, hp), jnp.float32)
+        n0 = jnp.zeros((b, n_heads, hp), jnp.float32)
+    else:
+        c0, n0 = cache["c"], cache["n"]
+    sw = lambda t: t.swapaxes(0, 1)
+    (c1, n1), hs = jax.lax.scan(
+        step, (c0, n0),
+        (sw(q.astype(jnp.float32)), sw(k.astype(jnp.float32)),
+         sw(v.astype(jnp.float32)), sw(ig), sw(fg)))
+    h = hs.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+    h = rmsnorm(p["norm"], h) * jax.nn.silu(gate.astype(jnp.float32)) \
+        .astype(x.dtype)
+    y = h @ p["wdown"]
+    new_cache = None if cache is None else {"c": c1, "n": n1}
+    return y, new_cache
+
+
+def slstm_init(key, d, n_heads):
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _init(ks[0], (d, 4 * d), dtype=jnp.float32),  # i,f,z,o
+        "norm": rmsnorm_init(d),
+        "wout": _init(ks[1], (d, d)),
+    }
+
+
+def slstm_apply(p, x, n_heads, *, cache=None):
+    b, s, d = x.shape
+    g = (x.astype(jnp.float32) @ p["wg"]).reshape(b, s, 4, d)
+    i = jnp.exp(-jax.nn.softplus(-g[:, :, 0]))
+    f = jnp.exp(-jax.nn.softplus(-g[:, :, 1]))
+    z = jnp.tanh(g[:, :, 2])
+    o = jnp.exp(-jax.nn.softplus(-g[:, :, 3]))
+
+    def step(c, inp):
+        i_t, f_t, z_t, o_t = inp
+        c = f_t * c + i_t * z_t
+        return c, o_t * jnp.tanh(c)
+
+    c0 = jnp.zeros((b, d), jnp.float32) if cache is None else cache["c"]
+    sw = lambda t: t.swapaxes(0, 1)
+    c1, hs = jax.lax.scan(step, c0, (sw(i), sw(f), sw(z), sw(o)))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    y = rmsnorm(p["norm"], h) @ p["wout"]
+    new_cache = None if cache is None else {"c": c1}
+    return y, new_cache
+
+
+def make_mlstm_cache(b, d, n_heads, proj=2):
+    di = proj * d
+    hp = di // n_heads
+    return {"c": jnp.zeros((b, n_heads, hp, hp), jnp.float32),
+            "n": jnp.zeros((b, n_heads, hp), jnp.float32)}
+
+
+def make_slstm_cache(b, d):
+    return {"c": jnp.zeros((b, d), jnp.float32)}

@@ -1,0 +1,2 @@
+"""Serving substrate: prefill / decode steps with sharded caches."""
+from repro.serve.steps import make_decode_step, make_prefill_step  # noqa

@@ -1,0 +1,46 @@
+"""Inference steps.
+
+``decode_step`` consumes one new token per sequence against a cache of
+``seq_len`` (the assignment's ``decode_32k`` / ``long_500k`` cells lower
+THIS, not train_step).  KV caches are sequence-sharded over 'model'
+(flash-decoding: XLA turns the softmax over the sharded axis into partial
+reductions + psum).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int):
+    def prefill_step(params, tokens):
+        """tokens: (B, S) -> (logits of last position, caches)."""
+        b, s = tokens.shape
+        caches = lm.make_caches(cfg, b, cache_len)
+        logits, caches, _ = lm.forward(
+            params, cfg, {"tokens": tokens}, caches=caches,
+            cache_index=jnp.int32(0))
+        return logits[:, -1, :], caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, greedy: bool = True):
+    def decode_step(params, caches, tokens, cache_index):
+        """tokens: (B, 1); cache_index: () — returns (next_tokens, caches)."""
+        logits, caches, _ = lm.forward(
+            params, cfg, {"tokens": tokens}, caches=caches,
+            cache_index=cache_index)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], caches
+    return decode_step
+
+
+def encode_step(cfg: ArchConfig):
+    """Encoder-only archs (hubert): a prefill-shaped full encode."""
+    def step(params, frames):
+        logits, _, _ = lm.forward(params, cfg, {"frames": frames})
+        return logits
+    return step

@@ -1,0 +1,3 @@
+"""Sparse substrate: JAX tensor formats, kernels and the distributed
+Active-Message dispatch layer (the paper's execution model at pod scale)."""
+from repro.sparse.formats import CSR, BCSR  # noqa: F401

@@ -1,0 +1,249 @@
+"""Active-Message dispatch at pod scale (DESIGN.md §2, paper §3.1.2-§3.1.3).
+
+The paper's execution model maps onto SPMD JAX like this:
+
+  * a **message** is a fixed-width record (operand values + routing indices)
+    in a bucketized ``all_to_all`` — the instruction travels to the shard
+    that owns the data, never the other way around;
+  * **data-driven execution**: the owner executes the payload against its
+    local shard (the paper's T2) and the *response* message carries the
+    result to the output owner (T3);
+  * **opportunistic execution / load stealing**: per-destination load is
+    known collectively (a psum'd histogram = the paper's congestion
+    signal), and work beyond a destination's capacity is re-routed to the
+    least-loaded shards — the TPU analogue of executing on idle PEs
+    en route (the thief can execute because the message carries the
+    operands, exactly the AM property the paper exploits).
+
+Everything here is `shard_map`-based and static-shaped: `capacity` plays the
+role of the router buffer depth; the overflow mask is the ON/OFF
+backpressure signal.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sparse.formats import CSR
+
+__all__ = ["bucketize", "unbucketize", "steal_overflow", "am_dispatch",
+           "shard_csr_rows", "spmv_sharded"]
+
+
+def bucketize(dest: jax.Array, n_shards: int, capacity: int):
+    """Pack local work items into per-destination buckets (static shapes).
+
+    Args:
+      dest: (L,) int32 destination shard of each local item (-1 = dead).
+    Returns:
+      idx:   (n_shards, capacity) int32 — local item index per bucket slot.
+      valid: (n_shards, capacity) bool.
+      rank:  (L,) int32 — slot each item took within its bucket.
+      kept:  (L,) bool — False where the bucket overflowed (backpressure).
+    """
+    length = dest.shape[0]
+    onehot = dest[:, None] == jnp.arange(n_shards)[None, :]      # (L,S)
+    rank = jnp.cumsum(onehot, axis=0) - 1                        # (L,S)
+    rank = jnp.sum(jnp.where(onehot, rank, 0), axis=1)           # (L,)
+    live = dest >= 0
+    kept = live & (rank < capacity)
+    idx = jnp.zeros((n_shards, capacity), jnp.int32)
+    valid = jnp.zeros((n_shards, capacity), jnp.bool_)
+    # dropped items scatter out of bounds (mode="drop") so they can never
+    # collide with a live item's slot.
+    d = jnp.where(kept, dest, n_shards)
+    r = jnp.where(kept, rank, capacity)
+    idx = idx.at[d, r].set(jnp.arange(length, dtype=jnp.int32), mode="drop")
+    valid = valid.at[d, r].set(True, mode="drop")
+    return idx, valid, rank.astype(jnp.int32), kept
+
+
+def unbucketize(bucketed: jax.Array, dest: jax.Array, rank: jax.Array,
+                kept: jax.Array, fill=0) -> jax.Array:
+    """Inverse of :func:`bucketize` for per-item results."""
+    d = jnp.where(kept, dest, 0)
+    r = jnp.where(kept, rank, 0)
+    out = bucketed[d, r]
+    return jnp.where(
+        kept.reshape(kept.shape + (1,) * (out.ndim - 1)), out, fill)
+
+
+def steal_overflow(dest: jax.Array, load: jax.Array, capacity: int
+                   ) -> jax.Array:
+    """Opportunistic re-routing: overflow items go to the idlest shards.
+
+    Args:
+      dest: (L,) requested destination per item.
+      load: (S,) *global* per-destination demand (psum of local histograms).
+    Returns adjusted destinations.  Deterministic: the i-th overflow item
+    goes to the shard with the i-th most free capacity (round robin over
+    shards with spare room) — the software separable allocator.
+    """
+    n_shards = load.shape[0]
+    free = jnp.maximum(capacity - load, 0)                        # (S,)
+    # items beyond capacity at their requested dest:
+    onehot = dest[:, None] == jnp.arange(n_shards)[None, :]
+    rank = jnp.sum(jnp.where(onehot, jnp.cumsum(onehot, 0) - 1, 0), 1)
+    over = (dest >= 0) & (rank >= capacity)
+    # assign overflow item k (in local order) to the shard whose cumulative
+    # free capacity covers k (a deterministic greedy fill).
+    over_rank = jnp.cumsum(over.astype(jnp.int32)) - 1            # (L,)
+    cumfree = jnp.cumsum(free)                                    # (S,)
+    new_dest = jnp.searchsorted(cumfree, over_rank + 1, side="left")
+    new_dest = jnp.clip(new_dest, 0, n_shards - 1).astype(dest.dtype)
+    return jnp.where(over, new_dest, dest)
+
+
+def am_dispatch(items: Any, dest: jax.Array, *, axis_name: str,
+                n_shards: int, capacity: int, opportunistic: bool = False):
+    """Route work-item records to their owning shard (call inside shard_map).
+
+    Args:
+      items: pytree of (L, ...) arrays — the message payloads.
+      dest: (L,) int32 owning-shard ids.
+    Returns:
+      recv:  pytree of (n_shards, capacity, ...) received payloads.
+      rvalid: (n_shards, capacity) bool.
+      meta:  opaque routing state for :func:`am_respond`.
+    """
+    if opportunistic:
+        ones = jnp.ones_like(dest, jnp.int32)
+        hist = jax.ops.segment_sum(
+            jnp.where(dest >= 0, ones, 0), jnp.clip(dest, 0),
+            num_segments=n_shards)
+        load = jax.lax.psum(hist, axis_name)
+        dest = steal_overflow(dest, load, capacity)
+    idx, valid, rank, kept = bucketize(dest, n_shards, capacity)
+
+    def pack(x):
+        picked = x[idx]                                       # (S,cap,...)
+        mask = valid.reshape(valid.shape + (1,) * (picked.ndim - 2))
+        return jnp.where(mask, picked, 0)
+
+    send = jax.tree.map(pack, items)
+    recv = jax.tree.map(
+        lambda x: jax.lax.all_to_all(x, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=True), send)
+    rvalid = jax.lax.all_to_all(valid.astype(jnp.int32), axis_name, 0, 0,
+                                tiled=True).astype(jnp.bool_)
+    meta = (dest, rank, kept)
+    return recv, rvalid, meta
+
+
+def am_respond(results: Any, meta, *, axis_name: str):
+    """Send per-received-item results back to the requesting shard."""
+    dest, rank, kept = meta
+    back = jax.tree.map(
+        lambda x: jax.lax.all_to_all(x, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=True), results)
+    return jax.tree.map(lambda x: unbucketize(x, dest, rank, kept), back)
+
+
+# ----------------------------------------------------------------------------
+# Distributed SpMV — the paper's Fig. 5 flow, shard_map edition.
+# ----------------------------------------------------------------------------
+def shard_csr_rows(a_dense: np.ndarray, n_shards: int, *,
+                   nnz_cap: int | None = None):
+    """nnz-balanced contiguous row partition (paper §3.1.1) -> stacked
+    per-shard CSR arrays suitable for shard_map.
+
+    Returns dict of stacked arrays + the row boundaries.
+    """
+    from repro.core.partition import nnz_balanced_rows
+
+    a_dense = np.asarray(a_dense)
+    m, n = a_dense.shape
+    rowptr = np.zeros((m + 1,), np.int64)
+    rows, cols = np.nonzero(a_dense)
+    np.add.at(rowptr, rows + 1, 1)
+    rowptr = np.cumsum(rowptr)
+    place = nnz_balanced_rows(rowptr, n_shards)
+    bounds = np.searchsorted(place.row_to_pe, np.arange(n_shards + 1))
+    rows_per = int(max(np.diff(bounds).max(), 1))
+    caps = [int((place.row_to_pe[rows] == s).sum()) for s in range(n_shards)]
+    cap = nnz_cap or max(max(caps), 1)
+
+    s_rowptr = np.zeros((n_shards, rows_per + 1), np.int32)
+    s_col = np.zeros((n_shards, cap), np.int32)
+    s_val = np.zeros((n_shards, cap), a_dense.dtype)
+    s_nnz = np.zeros((n_shards,), np.int32)
+    s_rows = np.zeros((n_shards,), np.int32)
+    for s in range(n_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        sel = (rows >= lo) & (rows < hi)
+        r, c = rows[sel] - lo, cols[sel]
+        s_nnz[s] = r.size
+        s_rows[s] = hi - lo
+        s_col[s, :r.size] = c
+        s_val[s, :r.size] = a_dense[rows[sel], cols[sel]]
+        rp = np.zeros((rows_per + 1,), np.int32)
+        np.add.at(rp, r + 1, 1)
+        s_rowptr[s] = np.cumsum(rp)
+    return dict(rowptr=s_rowptr, col=s_col, val=s_val, nnz=s_nnz,
+                nrows=s_rows, bounds=bounds, rows_per=rows_per, cap=cap,
+                n=n)
+
+
+def spmv_sharded(mesh, shards: dict, x: np.ndarray, *, axis: str = "data",
+                 capacity: int | None = None, opportunistic: bool = False):
+    """y = A @ x with A row-sharded (nnz-balanced) and x sharded: the AM flow.
+
+    T1: each shard emits one message per local nonzero (value + column).
+    T2: the column owner multiplies against its x shard (data-local).
+    T3: the response returns to the row owner and segment-adds into y.
+
+    ``opportunistic`` load stealing is only *semantics-preserving* for
+    ALU-class payloads whose operands travel in the message (paper §3.1.3);
+    the T2 hop here is a memory op bound to the x owner, so stealing must
+    stay off unless ``capacity`` exceeds the worst-case bucket (then it is a
+    no-op).  The MoE layer (repro.models.moe) is where stealing is used for
+    real — overflow tokens reroute to under-loaded experts.
+    """
+    n_shards = mesh.shape[axis]
+    n = shards["n"]
+    assert n % n_shards == 0, "x must shard evenly"
+    xs = n // n_shards
+    cap = capacity or int(shards["cap"])
+    rows_per = shards["rows_per"]
+
+    def step(rowptr, col, val, nnz, x_local):
+        # shard_map passes local blocks with the leading shard axis of size 1
+        rowptr, col, val = rowptr[0], col[0], val[0]
+        nnz, x_local = nnz[0], x_local[0]
+        length = col.shape[0]
+        live = jnp.arange(length) < nnz
+        dest = jnp.where(live, col // xs, -1)
+        row_of = jnp.clip(
+            jnp.searchsorted(rowptr, jnp.arange(length), "right") - 1,
+            0, rows_per - 1)
+        items = {"val": val, "off": col % xs}
+        recv, rvalid, meta = am_dispatch(
+            items, dest, axis_name=axis, n_shards=n_shards, capacity=cap,
+            opportunistic=opportunistic)
+        # T2 at the owner: multiply against the local x shard.
+        prod = jnp.where(rvalid, recv["val"] * x_local[recv["off"]], 0)
+        # T3: response home, accumulate into local output rows.
+        back = am_respond(prod, meta, axis_name=axis)
+        y = jax.ops.segment_sum(jnp.where(live, back, 0), row_of,
+                                num_segments=rows_per)
+        return y[None]
+
+    from jax import shard_map
+    fn = shard_map(
+        step, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis),
+                  P(axis)),
+        out_specs=P(axis, None))
+    y = fn(jnp.asarray(shards["rowptr"]), jnp.asarray(shards["col"]),
+           jnp.asarray(shards["val"]), jnp.asarray(shards["nnz"]),
+           jnp.asarray(x).reshape(n_shards, xs))
+    # stitch shards back to a flat (m,) vector
+    bounds = shards["bounds"]
+    parts = [np.asarray(y[s, :bounds[s + 1] - bounds[s]])
+             for s in range(n_shards)]
+    return np.concatenate(parts) if parts else np.zeros((0,))

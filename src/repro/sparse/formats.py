@@ -1,0 +1,128 @@
+"""Sparse tensor containers (JAX pytrees, static shapes).
+
+JAX needs static shapes, so both containers carry a *padded* nonzero region
+with an explicit ``nnz`` scalar; padding lanes have ``col = 0, val = 0`` and
+are harmless to every op in :mod:`repro.sparse.ops` (zero contributions).
+
+``CSR`` is the paper's format (§2.2); ``BCSR`` is the TPU-native adaptation —
+the MXU wants ≥(8,128)-shaped tiles, so the *block* is the unit the scale
+layer routes and computes on (DESIGN.md §2 "message granularity").
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row, padded to a static nonzero capacity."""
+
+    rowptr: jax.Array   # (m+1,) int32
+    col: jax.Array      # (cap,) int32 (padded with 0)
+    val: jax.Array      # (cap,) dtype
+    nnz: jax.Array      # () int32 — live prefix of col/val
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def row_ids(self) -> jax.Array:
+        """(cap,) row index of every (padded) nonzero; pads map to row 0 with
+        zero value, so segment-sums are unaffected."""
+        m = self.shape[0]
+        return jnp.clip(
+            jnp.searchsorted(self.rowptr, jnp.arange(self.col.shape[0]),
+                             side="right") - 1, 0, m - 1)
+
+    @classmethod
+    def from_dense(cls, a, *, cap: int | None = None) -> "CSR":
+        a = np.asarray(a)
+        m, n = a.shape
+        rows, cols = np.nonzero(a)
+        nnz = rows.size
+        cap = cap or max(1, nnz)
+        assert cap >= nnz, f"cap {cap} < nnz {nnz}"
+        rowptr = np.zeros((m + 1,), np.int32)
+        np.add.at(rowptr, rows + 1, 1)
+        rowptr = np.cumsum(rowptr).astype(np.int32)
+        col = np.zeros((cap,), np.int32)
+        val = np.zeros((cap,), a.dtype)
+        col[:nnz] = cols
+        val[:nnz] = a[rows, cols]
+        return cls(jnp.asarray(rowptr), jnp.asarray(col), jnp.asarray(val),
+                   jnp.int32(nnz), (m, n))
+
+    def to_dense(self) -> jax.Array:
+        m, n = self.shape
+        live = jnp.arange(self.col.shape[0]) < self.nnz
+        v = jnp.where(live, self.val, 0)
+        return jnp.zeros((m, n), self.val.dtype).at[
+            self.row_ids, self.col].add(v)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BCSR:
+    """Block CSR: (bm, bn) dense blocks — the MXU-shaped AM payload."""
+
+    indptr: jax.Array    # (mb+1,) int32 — block-rows
+    indices: jax.Array   # (bcap,) int32 — block-column ids (padded)
+    blocks: jax.Array    # (bcap, bm, bn) dtype
+    n_blocks: jax.Array  # () int32
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    block: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def blockrow_ids(self) -> jax.Array:
+        mb = self.shape[0] // self.block[0]
+        return jnp.clip(
+            jnp.searchsorted(self.indptr, jnp.arange(self.indices.shape[0]),
+                             side="right") - 1, 0, mb - 1)
+
+    @classmethod
+    def from_dense(cls, a, block: tuple[int, int] = (8, 128),
+                   *, cap: int | None = None) -> "BCSR":
+        a = np.asarray(a)
+        m, n = a.shape
+        bm, bn = block
+        assert m % bm == 0 and n % bn == 0, (m, n, block)
+        mb, nb = m // bm, n // bn
+        t = a.reshape(mb, bm, nb, bn).transpose(0, 2, 1, 3)
+        nzmask = np.abs(t).sum(axis=(2, 3)) != 0          # (mb, nb)
+        brows, bcols = np.nonzero(nzmask)
+        nblk = brows.size
+        cap = cap or max(1, nblk)
+        assert cap >= nblk
+        indptr = np.zeros((mb + 1,), np.int32)
+        np.add.at(indptr, brows + 1, 1)
+        indptr = np.cumsum(indptr).astype(np.int32)
+        indices = np.zeros((cap,), np.int32)
+        blocks = np.zeros((cap, bm, bn), a.dtype)
+        indices[:nblk] = bcols
+        blocks[:nblk] = t[brows, bcols]
+        return cls(jnp.asarray(indptr), jnp.asarray(indices),
+                   jnp.asarray(blocks), jnp.int32(nblk), (m, n), block)
+
+    def to_dense(self) -> jax.Array:
+        m, n = self.shape
+        bm, bn = self.block
+        mb, nb = m // bm, n // bn
+        live = jnp.arange(self.indices.shape[0]) < self.n_blocks
+        blk = jnp.where(live[:, None, None], self.blocks, 0)
+        out = jnp.zeros((mb, nb, bm, bn), self.blocks.dtype)
+        out = out.at[self.blockrow_ids, self.indices].add(blk)
+        return out.transpose(0, 2, 1, 3).reshape(m, n)
+
+
+def random_csr(key, m: int, n: int, density: float, *, dtype=jnp.float32,
+               cap: int | None = None) -> CSR:
+    """Test helper: unstructured sparsity at a target density."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key) if isinstance(key, int)
+                              else key)
+    mask = jax.random.uniform(k1, (m, n)) < density
+    vals = jax.random.normal(k2, (m, n), dtype)
+    return CSR.from_dense(np.asarray(jnp.where(mask, vals, 0)), cap=cap)

@@ -1,0 +1,85 @@
+"""Sparse linear algebra on the JAX side (reference + jitted paths).
+
+These are the *scale layer* versions of the paper's workloads (§4.2):
+``spmv``, ``spmspm`` (Gustavson), ``spmadd``, ``sddmm`` — all expressed with
+segment-sums and gathers so XLA lowers them to TPU-friendly code, and all
+serving as the numerical oracles for the Pallas kernels in
+:mod:`repro.kernels`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.formats import BCSR, CSR
+
+__all__ = ["spmv", "spmm", "spmadd", "sddmm", "spmspm_via_dense",
+           "bcsr_spmm"]
+
+
+def _live(c: CSR) -> jax.Array:
+    return jnp.arange(c.col.shape[0]) < c.nnz
+
+
+def spmv(a: CSR, x: jax.Array) -> jax.Array:
+    """y = A @ x.  Gather x[col] (the paper's T2), multiply, segment-add into
+    rows (T3) — the exact T1/T2/T3 decomposition of Fig. 4."""
+    prod = jnp.where(_live(a), a.val * x[a.col], 0)
+    return jax.ops.segment_sum(prod, a.row_ids, num_segments=a.shape[0])
+
+
+def spmm(a: CSR, b: jax.Array) -> jax.Array:
+    """C = A @ B with dense B: per-nonzero gather of B rows (Gustavson —
+    each nonzero A[i,k] scales row B[k,:], accumulated into C[i,:])."""
+    rows = jnp.where(_live(a)[:, None], a.val[:, None] * b[a.col], 0)
+    return jax.ops.segment_sum(rows, a.row_ids, num_segments=a.shape[0])
+
+
+def spmspm_via_dense(a: CSR, b: CSR) -> jax.Array:
+    """C = A @ B, both sparse: Gustavson via spmm over B's dense image.
+
+    The cycle-level fabric does this with streamed AMs; at the XLA level the
+    padded-static equivalent is gather-of-rows, which for a *padded* sparse B
+    equals spmm against its dense materialization (same FLOPs on TPU because
+    the MXU processes dense tiles anyway — see DESIGN.md §2).
+    """
+    return spmm(a, b.to_dense())
+
+
+def spmadd(a: CSR, b: CSR) -> jax.Array:
+    """C = A + B (dense image): pure scatter-add of both nonzero sets."""
+    m, n = a.shape
+    out = jnp.zeros((m, n), a.val.dtype)
+    out = out.at[a.row_ids, a.col].add(jnp.where(_live(a), a.val, 0))
+    out = out.at[b.row_ids, b.col].add(jnp.where(_live(b), b.val, 0))
+    return out
+
+
+def sddmm(a: jax.Array, b: jax.Array, mask: CSR) -> jax.Array:
+    """out[e] = <A[i_e, :], B[:, j_e]> for each mask nonzero e.
+
+    Returns the (padded) per-nonzero values aligned with ``mask.col``.
+    """
+    rows = a[mask.row_ids]          # (cap, k)
+    cols = b[:, mask.col]           # (k, cap)
+    vals = jnp.einsum("ek,ke->e", rows, cols)
+    return jnp.where(_live(mask), vals, 0)
+
+
+def bcsr_spmm(a: BCSR, b: jax.Array) -> jax.Array:
+    """C = A @ B with block-CSR A — the MXU-granular Gustavson.
+
+    Each (bm, bn) block multiplies the matching (bn, k) slice of B; results
+    segment-add into block-rows.  This is the jnp oracle for the Pallas
+    ``bcsr_spmv`` kernel.
+    """
+    m, n = a.shape
+    bm, bn = a.block
+    k = b.shape[1]
+    live = jnp.arange(a.indices.shape[0]) < a.n_blocks
+    bslice = b.reshape(n // bn, bn, k)[a.indices]          # (cap, bn, k)
+    part = jnp.einsum("cij,cjk->cik",
+                      jnp.where(live[:, None, None], a.blocks, 0), bslice)
+    acc = jax.ops.segment_sum(part, a.blockrow_ids,
+                              num_segments=m // bm)        # (mb, bm, k)
+    return acc.reshape(m, k)

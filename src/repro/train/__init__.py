@@ -1,0 +1,3 @@
+"""Training substrate: optimizer, train step, gradient compression."""
+from repro.train.optimizer import adamw_init, adamw_update  # noqa: F401
+from repro.train.step import make_train_step  # noqa: F401

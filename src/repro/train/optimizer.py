@@ -1,0 +1,59 @@
+"""AdamW with f32 master weights (ZeRO-style: the optimizer state inherits
+the parameters' FSDP sharding, so m/v/master are sharded over 'data' x
+'model' automatically — no separate partitioning pass needed)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    master: dict     # f32 master copy of the (bf16) params
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        master=jax.tree.map(f32, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, clip_norm=1.0):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        w = w - lr * (step + weight_decay * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(
+        t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(
+        t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(
+        t, tuple))
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, AdamWState(m, v, master, count), gnorm

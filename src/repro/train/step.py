@@ -1,0 +1,99 @@
+"""train_step / loss builders for every assigned architecture.
+
+The step is a single jit-able function: microbatched (optional) forward +
+backward with remat over the scanned blocks, AdamW update, aux-loss mixing
+for MoE.  Shardings come from :mod:`repro.distributed.sharding`; XLA SPMD
+inserts all collectives (per-layer FSDP all-gathers inside the scan,
+reduce-scatter of grads, TP all-reduces).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.models.layers import cross_entropy
+from repro.train import optimizer as opt
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, aux_weight=0.01):
+    logits, _, aux = lm.forward(params, cfg, batch)
+    if cfg.frontend == "vision":
+        # loss over the text region only (patches carry no labels)
+        s_text = batch["labels"].shape[1]
+        logits = logits[:, -s_text:, :]
+    if cfg.encoder_only:
+        loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    else:
+        loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+    return loss + aux_weight * aux, aux
+
+
+def make_train_step(cfg: ArchConfig, *, lr=3e-4, microbatch: int | None = None,
+                    aux_weight=0.01):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    microbatch: split the local batch into this many sequential chunks and
+    accumulate grads (activation-memory lever for the perf loop).
+    """
+
+    def grads_of(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, aux_weight=aux_weight),
+            has_aux=True)(params, batch=batch)
+        return loss, aux, grads
+
+    def train_step(params, state, batch):
+        if microbatch and microbatch > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatch == 0
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+            mbatch = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                gsum, lsum, asum = carry
+                loss, aux, grads = grads_of(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss, asum + aux), ()
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                body, (zeros, 0.0, 0.0), mbatch)
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+            loss, aux = lsum / microbatch, asum / microbatch
+        else:
+            loss, aux, grads = grads_of(params, batch)
+        new_params, new_state, gnorm = opt.adamw_update(
+            grads, state, params, lr=lr)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def synth_batch(cfg: ArchConfig, batch: int, seq: int, key=None):
+    """Synthetic batch with the right modality inputs (also the shape donor
+    for input_specs)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.frontend == "audio":
+        return {
+            "frames": jax.random.normal(key, (batch, seq, 512), jnp.bfloat16),
+            "labels": jax.random.randint(key, (batch, seq), 0, cfg.vocab),
+            "mask": jnp.ones((batch, seq), jnp.float32),
+        }
+    if cfg.frontend == "vision":
+        s_text = max(seq - cfg.n_patches, 8)
+        return {
+            "tokens": jax.random.randint(key, (batch, s_text), 0, cfg.vocab),
+            "patches": jax.random.normal(
+                key, (batch, cfg.n_patches, cfg.d_frontend), jnp.bfloat16),
+            "labels": jax.random.randint(key, (batch, s_text), 0, cfg.vocab),
+        }
+    toks = jax.random.randint(key, (batch, seq), 0, cfg.vocab)
+    return {"tokens": toks, "labels": toks}

@@ -1,0 +1,46 @@
+"""Block-causal attention skip (§Perf optimization) must be numerically
+identical to full masked attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mla as M
+from repro.models.config import MLACfg
+
+
+def test_sdpa_causal_skip_matches_full():
+    key = jax.random.PRNGKey(0)
+    b, h, kv, s, hd = 2, 4, 2, 1024, 16
+    q = jax.random.normal(key, (b, h, s, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, kv, s, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, kv, s, hd), jnp.float32)
+    full = L._sdpa(q, k, v, causal=True)
+    skip = L._sdpa(q, k, v, causal=True, causal_skip=True)
+    np.testing.assert_allclose(np.asarray(skip), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_layer_causal_skip_matches():
+    key = jax.random.PRNGKey(3)
+    d, h, kv, hd, s = 64, 4, 2, 16, 512
+    p = L.attn_init(key, d, h, kv, hd)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, s, d), jnp.float32)
+    y0, _ = L.attention(p, x, n_heads=h, n_kv=kv, hd=hd, theta=1e4)
+    y1, _ = L.attention(p, x, n_heads=h, n_kv=kv, hd=hd, theta=1e4,
+                        causal_skip=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_mla_causal_skip_matches():
+    cfg = MLACfg(kv_lora=32, rope_dim=16, nope_dim=32, v_dim=32)
+    key = jax.random.PRNGKey(5)
+    d, h, s = 64, 4, 512
+    p = M.mla_init(key, d, h, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, s, d), jnp.float32)
+    y0, _ = M.mla_attention(p, x, n_heads=h, cfg=cfg, theta=1e4)
+    y1, _ = M.mla_attention(p, x, n_heads=h, cfg=cfg, theta=1e4,
+                            causal_skip=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-4,
+                               atol=2e-4)

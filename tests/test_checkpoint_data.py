@@ -1,0 +1,148 @@
+"""Checkpoint store (atomicity, async, retention, elastic reshard) and data
+pipeline (determinism, restore-exactness, prefetch)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import MemmapTokenDataset, Prefetcher, SyntheticTokenStream
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 16)),
+            "b": {"x": jnp.arange(5, dtype=jnp.int32)},
+            "step": jnp.int32(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t, extra={"data": {"step": 9}})
+    got, step, extra = restore_checkpoint(str(tmp_path), t)
+    assert step == 3 and extra["data"]["step"] == 9
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), t, got)
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.latest() == 4
+    # only the 2 newest survive
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000003", "step_00000004"]
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    # a torn write: directory exists but no commit marker
+    torn = tmp_path / "step_00000002"
+    torn.mkdir()
+    (torn / "tree.json").write_text("{}")
+    assert latest_step(str(tmp_path)) == 1
+    got, step, _ = restore_checkpoint(str(tmp_path), t)
+    assert step == 1
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree()
+    mgr.save(5, t, blocking=False)
+    mgr.wait()
+    got, step, _ = mgr.restore(t)
+    assert step == 5
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), t, got)
+
+
+def test_async_save_snapshot_isolated(tmp_path):
+    """Mutating the source tree after save() must not affect the file."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    arr = np.ones((4,), np.float32)
+    mgr.save(1, {"a": arr}, blocking=False)
+    arr *= 100.0   # mutate after snapshot
+    mgr.wait()
+    got, _, _ = mgr.restore({"a": arr})
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.ones((4,)))
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    with pytest.raises(ValueError, match="leaves"):
+        restore_checkpoint(str(tmp_path), {"only": jnp.zeros((2,))})
+
+
+def test_elastic_reshard(tmp_path):
+    """Restore re-device_puts onto a different mesh shape."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    t = {"w": jnp.arange(16.0).reshape(8, 2)}
+    save_checkpoint(str(tmp_path), 1, t)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    got, _, _ = restore_checkpoint(str(tmp_path), t, shardings=sh)
+    assert got["w"].sharding.is_equivalent_to(sh["w"], 2)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_synthetic_deterministic():
+    a = SyntheticTokenStream(100, 4, 16, seed=3)
+    b = SyntheticTokenStream(100, 4, 16, seed=3)
+    for _ in range(3):
+        ba, bb = next(a), next(b)
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    c = SyntheticTokenStream(100, 4, 16, seed=4)
+    assert not np.array_equal(next(c)["tokens"], next(a)["tokens"])
+
+
+def test_synthetic_state_restore():
+    a = SyntheticTokenStream(100, 4, 16, seed=3)
+    next(a); next(a)
+    st = a.state()
+    want = next(a)
+    b = SyntheticTokenStream(100, 4, 16)
+    b.restore(st)
+    got = next(b)
+    np.testing.assert_array_equal(want["tokens"], got["tokens"])
+
+
+def test_memmap_dataset(tmp_path):
+    toks = np.arange(10_000, dtype=np.uint16) % 512
+    p = tmp_path / "tokens.bin"
+    toks.tofile(p)
+    ds = MemmapTokenDataset(str(p), batch=4, seq=32, seed=1)
+    b = next(ds)
+    assert b["tokens"].shape == (4, 32) and b["labels"].shape == (4, 32)
+    # label shift property: labels are the next token
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    # restore-exactness
+    st = ds.state()
+    want = next(ds)
+    ds2 = MemmapTokenDataset(str(p), batch=4, seq=32)
+    ds2.restore(st)
+    np.testing.assert_array_equal(next(ds2)["tokens"], want["tokens"])
+
+
+def test_prefetcher_preserves_stream_and_state():
+    src = SyntheticTokenStream(100, 2, 8, seed=7)
+    ref = SyntheticTokenStream(100, 2, 8, seed=7)
+    pf = Prefetcher(src, depth=2)
+    for _ in range(3):
+        np.testing.assert_array_equal(next(pf)["tokens"],
+                                      next(ref)["tokens"])
+    # state accounts for queued lookahead: restoring it continues at the
+    # reference position
+    import time
+    time.sleep(0.05)   # let the prefetch thread fill the queue
+    st = pf.state()
+    cont = SyntheticTokenStream(100, 2, 8)
+    cont.restore(st)
+    np.testing.assert_array_equal(next(cont)["tokens"],
+                                  next(ref)["tokens"])
+    pf.close()

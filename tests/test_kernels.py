@@ -1,0 +1,174 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs. the pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import bcsr_spmm, group_matmul, grouped_expert_matmul, \
+    sddmm_blocks
+from repro.kernels.bcsr_spmm.ref import bcsr_spmm_ref
+from repro.kernels.group_matmul.ref import group_matmul_ref, \
+    grouped_expert_matmul_ref
+from repro.kernels.sddmm.ref import sddmm_blocks_ref
+from repro.sparse.formats import BCSR
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bcsr_spmm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,n,k,block,density", [
+    (32, 64, 16, (8, 16), 0.3),
+    (64, 64, 128, (16, 16), 0.15),
+    (16, 128, 256, (8, 128), 0.5),
+    (128, 256, 64, (8, 128), 0.05),
+])
+def test_bcsr_spmm_sweep(m, n, k, block, density, dtype):
+    a_dense = np.where(RNG.random((m, n)) < density,
+                       RNG.standard_normal((m, n)), 0).astype(np.float32)
+    a = BCSR.from_dense(a_dense, block=block)
+    a = jax.tree.map(lambda x: x.astype(dtype)
+                     if jnp.issubdtype(x.dtype, jnp.floating) else x, a)
+    b = jnp.asarray(RNG.standard_normal((n, k)), dtype)
+    got = bcsr_spmm(a, b, interpret=True)
+    want = bcsr_spmm_ref(a.indptr, a.indices, a.blocks, b,
+                         n_blocks=a.n_blocks)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+    # and against the dense matmul oracle
+    dense = np.asarray(a.to_dense(), np.float32) @ np.asarray(b, np.float32)
+    np.testing.assert_allclose(got, dense, **_tol(dtype))
+
+
+def test_bcsr_spmm_padding_lanes():
+    """Padding blocks (beyond n_blocks) must not contribute."""
+    a_dense = np.where(RNG.random((32, 32)) < 0.3,
+                       RNG.standard_normal((32, 32)), 0).astype(np.float32)
+    a = BCSR.from_dense(a_dense, block=(8, 16), cap=64)   # cap > nblk
+    # poison the padding lanes
+    pois = a.blocks.at[int(a.n_blocks):].set(1e6)
+    idx = a.indices.at[int(a.n_blocks):].set(1)
+    a = BCSR(a.indptr, idx, pois, a.n_blocks, a.shape, a.block)
+    b = jnp.asarray(RNG.standard_normal((32, 16)), jnp.float32)
+    got = bcsr_spmm(a, b, interpret=True)
+    dense = np.asarray(a_dense) @ np.asarray(b)
+    np.testing.assert_allclose(got, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_bcsr_spmm_empty_rows():
+    """Block-rows with no nonzero blocks must come out exactly zero."""
+    a_dense = np.zeros((64, 32), np.float32)
+    a_dense[8:16] = RNG.standard_normal((8, 32))   # only block-row 1 live
+    a = BCSR.from_dense(a_dense, block=(8, 16))
+    b = jnp.asarray(RNG.standard_normal((32, 16)), jnp.float32)
+    got = np.asarray(bcsr_spmm(a, b, interpret=True))
+    assert np.all(got[:8] == 0) and np.all(got[16:] == 0)
+    np.testing.assert_allclose(got[8:16], a_dense[8:16] @ np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bcsr_spmm_all_zero():
+    a = BCSR.from_dense(np.zeros((16, 16), np.float32), block=(8, 8))
+    b = jnp.ones((16, 8), jnp.float32)
+    got = np.asarray(bcsr_spmm(a, b, interpret=True))
+    assert np.all(got == 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(mb=st.integers(1, 4), nb=st.integers(1, 4),
+       density=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_bcsr_spmm_property(mb, nb, density, seed):
+    """Property: kernel == dense matmul for any block-sparsity pattern."""
+    rng = np.random.default_rng(seed)
+    bm, bn = 8, 16
+    m, n, k = mb * bm, nb * bn, 16
+    a_dense = np.where(rng.random((m, n)) < density,
+                       rng.standard_normal((m, n)), 0).astype(np.float32)
+    a = BCSR.from_dense(a_dense, block=(bm, bn))
+    b = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    got = bcsr_spmm(a, b, interpret=True)
+    np.testing.assert_allclose(got, a_dense @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sddmm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,d,n,bm,bn,dk,nblk", [
+    (32, 64, 32, 8, 8, 16, 7),
+    (64, 128, 64, 16, 16, 128, 12),
+    (16, 256, 128, 8, 128, 64, 3),
+])
+def test_sddmm_sweep(m, d, n, bm, bn, dk, nblk, dtype):
+    a = jnp.asarray(RNG.standard_normal((m, d)), dtype)
+    b = jnp.asarray(RNG.standard_normal((d, n)), dtype)
+    brow = jnp.asarray(RNG.integers(0, m // bm, nblk), jnp.int32)
+    bcol = jnp.asarray(RNG.integers(0, n // bn, nblk), jnp.int32)
+    got = sddmm_blocks(brow, bcol, a, b, bm=bm, bn=bn, dk=dk,
+                       interpret=True)
+    want = sddmm_blocks_ref(brow, bcol, a, b, bm=bm, bn=bn)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+def test_sddmm_padding_and_unpadded_d():
+    """d not a multiple of dk exercises the internal contraction padding;
+    lanes beyond n_blocks are masked."""
+    m, d, n = 16, 100, 16          # d=100 -> padded to 128
+    a = jnp.asarray(RNG.standard_normal((m, d)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((d, n)), jnp.float32)
+    brow = jnp.asarray([0, 1, 1, 0], jnp.int32)
+    bcol = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    got = sddmm_blocks(brow, bcol, a, b, bm=8, bn=8, dk=128, n_blocks=2,
+                       interpret=True)
+    dense = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(got[0], dense[0:8, 0:8], rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(got[1], dense[8:16, 8:16], rtol=1e-4,
+                               atol=1e-4)
+    assert np.all(np.asarray(got[2:]) == 0)
+
+
+# ---------------------------------------------------------------------------
+# group_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("tiles,tile_m,d,f,e", [
+    (4, 8, 32, 64, 3),
+    (8, 16, 128, 128, 4),
+    (2, 8, 100, 72, 2),            # unaligned d/f -> internal padding
+])
+def test_group_matmul_sweep(tiles, tile_m, d, f, e, dtype):
+    x = jnp.asarray(RNG.standard_normal((tiles * tile_m, d)), dtype)
+    w = jnp.asarray(RNG.standard_normal((e, d, f)), dtype)
+    eid = jnp.asarray(RNG.integers(0, e, tiles), jnp.int32)
+    got = group_matmul(x, eid, w, tile_m=tile_m, interpret=True)
+    want = group_matmul_ref(x, eid, w, tile_m=tile_m)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("e,c,d,f", [(4, 16, 32, 64), (2, 10, 64, 32)])
+def test_grouped_expert_matmul(e, c, d, f):
+    xe = jnp.asarray(RNG.standard_normal((e, c, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((e, d, f)), jnp.float32)
+    got = grouped_expert_matmul(xe, w, tile_m=8, interpret=True)
+    want = grouped_expert_matmul_ref(xe, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_group_matmul_matches_moe_einsum():
+    """The kernel must agree with the einsum used inside moe_apply."""
+    e, c, d, f = 4, 24, 48, 96
+    xe = jnp.asarray(RNG.standard_normal((e, c, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((e, d, f)), jnp.float32)
+    got = grouped_expert_matmul(xe, w, tile_m=8, interpret=True)
+    want = jnp.einsum("ecd,edf->ecf", xe, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
