@@ -34,6 +34,9 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    from repro.core import machine
+    machine.enable_persistent_compile_cache()
+
     table = None
     failures = []
     for name, desc in SECTIONS:

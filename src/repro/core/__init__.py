@@ -10,4 +10,7 @@
   TIA-Valiant are `machine` flags.
 * :mod:`repro.core.metrics` — MOPS / MOPS-per-mW / utilization accounting.
 """
-from repro.core.machine import MachineConfig, RunResult, run  # noqa: F401
+from repro.core.batch import BatchedWorkloads, stack_workloads  # noqa: F401
+from repro.core.machine import (  # noqa: F401
+    MachineConfig, RunResult, run, run_many,
+)

@@ -1,0 +1,111 @@
+"""Batch padding / stacking helpers for :func:`repro.core.machine.run_many`.
+
+The paper's headline results are design-space sweeps (Figs. 11–17): many
+workload / configuration points on the same fabric.  To evaluate B compiled
+workloads in one ``jax.vmap``-batched device call their arrays must share
+shapes, so this module pads each lane to the common maximum:
+
+  * ``prog``       -> (B, P, CFG_F); zero (= NOP) rows appended, and P is
+    rounded up to a multiple of :data:`PROG_BUCKET` so different programs
+    land on the same compiled engine shape.
+  * ``static_ams`` -> (B, N, Q, MSG_F); entries beyond ``amq_len`` are
+    never injected.
+  * ``mem_val`` / ``mem_meta`` -> (B, N, M, ...); words beyond a lane's
+    compiled ``mem_words`` are never addressed (the compiler's bump
+    allocator raises before emitting an out-of-range address).
+
+Padding is therefore semantically inert: a padded lane steps through
+exactly the same per-cycle transitions as its solo run, so batched metrics
+are bit-identical to sequential ones (asserted in tests/test_batch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Programs are tiny (a handful of config rows); bucketing their padded
+# length keeps every workload on one jit specialization per fabric config.
+PROG_BUCKET = 8
+
+
+@dataclasses.dataclass
+class BatchedWorkloads:
+    """B workloads padded to common shapes, ready for ``run_many``."""
+
+    prog: np.ndarray        # (B, P, CFG_F)
+    static_ams: np.ndarray  # (B, N, Q, MSG_F)
+    amq_len: np.ndarray     # (B, N)
+    mem_val: np.ndarray     # (B, N, M)
+    mem_meta: np.ndarray    # (B, N, M, 2)
+
+    @property
+    def batch(self) -> int:
+        return self.prog.shape[0]
+
+    @property
+    def n_pes(self) -> int:
+        return self.static_ams.shape[1]
+
+    @property
+    def mem_words(self) -> int:
+        return self.mem_val.shape[2]
+
+
+def pad_axis(a: np.ndarray, size: int, axis: int) -> np.ndarray:
+    """Zero-pad ``a`` up to ``size`` along ``axis`` (no-op when already
+    there)."""
+    grow = size - a.shape[axis]
+    if grow < 0:
+        raise ValueError(f"cannot shrink axis {axis}: {a.shape[axis]} -> "
+                         f"{size}")
+    if grow == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, grow)
+    return np.pad(a, widths)
+
+
+def bucket(n: int, step: int = PROG_BUCKET) -> int:
+    """Round ``n`` up to a multiple of ``step`` (minimum one bucket)."""
+    return max(step, -(-n // step) * step)
+
+
+def stack_workloads(workloads) -> BatchedWorkloads:
+    """Stack compiled workloads into one padded batch.
+
+    Accepts anything with ``prog`` / ``static_ams`` / ``amq_len`` /
+    ``mem_val`` / ``mem_meta`` attributes (e.g.
+    :class:`repro.core.compiler.CompiledWorkload`) or bare 5-tuples in that
+    order.  Every lane must target the same fabric size (same PE count).
+    """
+    rows = []
+    for wl in workloads:
+        if hasattr(wl, "prog"):
+            rows.append((wl.prog, wl.static_ams, wl.amq_len,
+                         wl.mem_val, wl.mem_meta))
+        else:
+            rows.append(tuple(wl))
+    if not rows:
+        raise ValueError("empty workload batch")
+    n = rows[0][1].shape[0]
+    for i, r in enumerate(rows):
+        if r[1].shape[0] != n:
+            raise ValueError(f"lane {i} compiled for {r[1].shape[0]} PEs, "
+                             f"lane 0 for {n}: fabric sizes must match "
+                             "(batch per mesh size)")
+    p = bucket(max(r[0].shape[0] for r in rows))
+    q = max(r[1].shape[1] for r in rows)
+    m = max(r[3].shape[1] for r in rows)
+    return BatchedWorkloads(
+        prog=np.stack([pad_axis(np.asarray(r[0], np.int32), p, 0)
+                       for r in rows]),
+        static_ams=np.stack([pad_axis(np.asarray(r[1], np.int32), q, 1)
+                             for r in rows]),
+        amq_len=np.stack([np.asarray(r[2], np.int32) for r in rows]),
+        mem_val=np.stack([pad_axis(np.asarray(r[3], np.int32), m, 1)
+                          for r in rows]),
+        mem_meta=np.stack([pad_axis(np.asarray(r[4], np.int32), m, 1)
+                           for r in rows]),
+    )
+

@@ -114,6 +114,7 @@ class MachineState(NamedTuple):
     amq_head: jnp.ndarray   # (N,)
     amq_len: jnp.ndarray    # (N,)
     pend: jnp.ndarray       # (N, PEND_CAP, MSG_F) output FIFO to inject port
+    pend_h: jnp.ndarray     # (N,) circular-buffer head (oldest entry)
     pend_n: jnp.ndarray     # (N,)
     mem_val: jnp.ndarray    # (N, MEM) local data memory (values)
     mem_meta: jnp.ndarray   # (N, MEM, 2) per-word metadata (compiler-placed)
@@ -122,6 +123,7 @@ class MachineState(NamedTuple):
     stream_base: jnp.ndarray  # (N,) current element address
     stream_left: jnp.ndarray  # (N,) elements remaining
     swq: jnp.ndarray        # (N, SWQ, MSG_F) stream-task wait queue
+    swq_h: jnp.ndarray      # (N,) circular-buffer head (oldest entry)
     swq_n: jnp.ndarray      # (N,)
     rr: jnp.ndarray         # (N,) round-robin priority pointer
     cycle: jnp.ndarray      # () cycle counter
@@ -155,6 +157,7 @@ def init_state(cfg: MachineConfig,
         amq_head=z((n,), jnp.int32),
         amq_len=jnp.asarray(amq_len, jnp.int32),
         pend=z((n, PEND_CAP, MSG_F), jnp.int32),
+        pend_h=z((n,), jnp.int32),
         pend_n=z((n,), jnp.int32),
         mem_val=jnp.asarray(mem_val, jnp.int32),
         mem_meta=jnp.asarray(mem_meta, jnp.int32),
@@ -163,6 +166,7 @@ def init_state(cfg: MachineConfig,
         stream_base=z((n,), jnp.int32),
         stream_left=z((n,), jnp.int32),
         swq=z((n, cfg.stream_wait_cap, MSG_F), jnp.int32),
+        swq_h=z((n,), jnp.int32),
         swq_n=z((n,), jnp.int32),
         rr=z((n,), jnp.int32),
         cycle=jnp.int32(0),
@@ -234,17 +238,19 @@ def _anchor_tia(nxt: jnp.ndarray, pe_ids: jnp.ndarray) -> jnp.ndarray:
 # ----------------------------------------------------------------------------
 # One clock cycle
 # ----------------------------------------------------------------------------
-def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
-    """Build the jit-able single-cycle transition for a compiled program.
+def _make_cycle(cfg: MachineConfig):
+    """Build the program-parametric single-cycle transition.
 
-    Args:
-      prog: (P_MAX, CFG_F) replicated configuration memory (§3.3.1).
+    Returns ``cycle(prog_j, st) -> st`` where ``prog_j`` is the replicated
+    configuration memory as a *traced* ``(P, CFG_F)`` array.  Keeping the
+    program out of the trace constants means one compiled engine serves
+    every workload with the same shapes — the sweep compile cache in
+    :func:`run_many` relies on this.
     """
     n, w = cfg.n_pes, cfg.width
     nbr_np, opp_np = cfg.neighbor_maps()
     nbr = jnp.asarray(nbr_np)          # (N,4)
     opp = jnp.asarray(opp_np)          # (4,)
-    prog_j = jnp.asarray(prog, jnp.int32)
     xs = jnp.arange(n, dtype=jnp.int32) % w
     ys = jnp.arange(n, dtype=jnp.int32) // w
     pe_ids = jnp.arange(n, dtype=jnp.int32)
@@ -278,7 +284,7 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
                                 jnp.where(dy != 0, ns, OUT_LOCAL))))
         return port.astype(jnp.int32)
 
-    def cycle(st: MachineState) -> MachineState:
+    def cycle(prog_j: jnp.ndarray, st: MachineState) -> MachineState:
         heads = st.buf[:, :, 0, :]                     # (N,5,F)
         head_v = st.buf_n > 0                          # (N,5)
 
@@ -407,7 +413,7 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
         write_mask = do_add | do_set | do_min | do_chk
         mem_val = st.mem_val
         mem_val = jax.vmap(
-            lambda row, a, v, m: jnp.where(m, row.at[a].set(v), row)
+            lambda row, a, v, m: row.at[a].set(jnp.where(m, v, row[a]))
         )(mem_val, addr_res, new_word, write_mask)
 
         # -- outgoing dynamic AM construction --------------------------------
@@ -472,10 +478,13 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
         nxt_a = nxt_a.at[:, F_VALID].set(jnp.where(emits_a, 1, 0))
 
         # -- STREAM accept: push the stream task into the wait queue ---------
-        swq, swq_n = st.swq, st.swq_n
-        wpos = jnp.clip(swq_n, 0, cfg.stream_wait_cap - 1)
+        # The wait queue (like the pending FIFO below) is a circular buffer:
+        # push/pop are O(1) scatters/gathers instead of whole-array shifts,
+        # which keeps the per-cycle cost independent of queue capacity.
+        swq, swq_h, swq_n = st.swq, st.swq_h, st.swq_n
+        wpos = (swq_h + swq_n) % cfg.stream_wait_cap
         swq = jax.vmap(
-            lambda q, i, v, m: jnp.where(m, q.at[i].set(v), q)
+            lambda q, i, v, m: q.at[i].set(jnp.where(m, v, q[i]))
         )(swq, wpos, msg, starts_stream)
         swq_n = swq_n + starts_stream.astype(jnp.int32)
 
@@ -483,7 +492,8 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
         # Descriptor word (mem_val=base, meta0=count) at Op2 (address) — or
         # at Res when Op2 holds a value (PageRank: Op2 carries the degree).
         issue = (~st.stream_on) & (swq_n > 0)
-        task = swq[:, 0, :]
+        task = jnp.take_along_axis(
+            swq, swq_h[:, None, None].repeat(MSG_F, 2), 1)[:, 0, :]
         t_res = jnp.clip(task[:, F_RES], 0, cfg.mem_words - 1)
         t_op2 = jnp.clip(task[:, F_OP2], 0, cfg.mem_words - 1)
         desc_a = jnp.where(task[:, F_OP2C] == 1, t_res, t_op2)
@@ -495,24 +505,22 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
         stream_msg = jnp.where(issue[:, None], task, st.stream_msg)
         stream_base = jnp.where(issue, s_base, st.stream_base)
         stream_left = jnp.where(issue, s_cnt, st.stream_left)
-        swq = jnp.where(issue[:, None, None],
-                        jnp.concatenate([swq[:, 1:, :],
-                                         jnp.zeros_like(swq[:, :1, :])], 1),
-                        swq)
+        swq_h = (swq_h + issue.astype(jnp.int32)) % cfg.stream_wait_cap
         swq_n = swq_n - issue.astype(jnp.int32)
 
         # -- push executed-output AMs into the pending FIFO ------------------
-        # (decode-unit output, then compute-unit output: ≤2 pushes/cycle)
-        pend, pend_n = st.pend, st.pend_n
-        pos = jnp.clip(pend_n, 0, PEND_CAP - 1)
+        # (decode-unit output, then compute-unit output: ≤2 pushes/cycle;
+        # circular buffer — see the stream wait queue above)
+        pend, pend_h, pend_n = st.pend, st.pend_h, st.pend_n
+        pos = (pend_h + pend_n) % PEND_CAP
         pend = jax.vmap(
-            lambda q, i, v, m: jnp.where(m, q.at[i].set(v), q)
+            lambda q, i, v, m: q.at[i].set(jnp.where(m, v, q[i]))
         )(pend, pos, nxt, emits)
         pend_n = pend_n + emits.astype(jnp.int32)
         emits_a_pend = emits_a & ~was_icept      # intercepted: in-place
-        pos_a = jnp.clip(pend_n, 0, PEND_CAP - 1)
+        pos_a = (pend_h + pend_n) % PEND_CAP
         pend = jax.vmap(
-            lambda q, i, v, m: jnp.where(m, q.at[i].set(v), q)
+            lambda q, i, v, m: q.at[i].set(jnp.where(m, v, q[i]))
         )(pend, pos_a, nxt_a, emits_a_pend)
         pend_n = pend_n + emits_a_pend.astype(jnp.int32)
 
@@ -558,9 +566,9 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
         sp = sp.at[:, F_VIA].set(-1)
         if not cfg.opportunistic:
             sp = _anchor_tia(sp, pe_ids)
-        pos2 = jnp.clip(pend_n, 0, PEND_CAP - 1)
+        pos2 = (pend_h + pend_n) % PEND_CAP
         pend = jax.vmap(
-            lambda q, i, v, m: jnp.where(m, q.at[i].set(v), q)
+            lambda q, i, v, m: q.at[i].set(jnp.where(m, v, q[i]))
         )(pend, pos2, sp, can_emit)
         pend_n = pend_n + can_emit.astype(jnp.int32)
         stream_base = jnp.where(can_emit, stream_base + 1, stream_base)
@@ -634,7 +642,8 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
         have_stat = st.amq_head < st.amq_len
         inj_dyn = inj_space & have_dyn
         inj_stat = inj_space & ~have_dyn & have_stat
-        dyn_msg = pend[:, 0, :]
+        dyn_msg = jnp.take_along_axis(
+            pend, pend_h[:, None, None].repeat(MSG_F, 2), 1)[:, 0, :]
         stat_msg = jnp.take_along_axis(
             st.amq, jnp.clip(st.amq_head, 0, st.amq.shape[1] - 1)
             [:, None, None].repeat(MSG_F, 2), 1)[:, 0, :]
@@ -674,10 +683,7 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
         )(buf, posi, inj_msg, net_inj)
         buf_n = buf_n.at[:, P_INJ].add(net_inj.astype(jnp.int32))
         # consume sources
-        pend = jnp.where(inj_dyn[:, None, None],
-                         jnp.concatenate([pend[:, 1:, :],
-                                          jnp.zeros_like(pend[:, :1, :])], 1),
-                         pend)
+        pend_h = (pend_h + inj_dyn.astype(jnp.int32)) % PEND_CAP
         pend_n = pend_n - inj_dyn.astype(jnp.int32)
         amq_head = st.amq_head + inj_stat.astype(jnp.int32)
 
@@ -692,10 +698,12 @@ def make_cycle_fn(cfg: MachineConfig, prog: np.ndarray):
 
         return MachineState(
             buf=buf, buf_n=buf_n, amq=st.amq, amq_head=amq_head,
-            amq_len=st.amq_len, pend=pend, pend_n=pend_n, mem_val=mem_val,
+            amq_len=st.amq_len, pend=pend, pend_h=pend_h, pend_n=pend_n,
+            mem_val=mem_val,
             mem_meta=st.mem_meta, stream_on=stream_on, stream_msg=stream_msg,
             stream_base=stream_base, stream_left=stream_left, swq=swq,
-            swq_n=swq_n, rr=(st.rr + 1) % PORTS, cycle=st.cycle + 1,
+            swq_h=swq_h, swq_n=swq_n, rr=(st.rr + 1) % PORTS,
+            cycle=st.cycle + 1,
             st_busy=st_busy, st_exec=st_exec, st_enroute=st_enroute,
             st_stall=st_stall, st_hops=st_hops, st_inj=st_inj)
 
@@ -726,47 +734,201 @@ class RunResult:
     completed: bool
 
 
-def run(cfg: MachineConfig, prog: np.ndarray, static_ams: np.ndarray,
-        amq_len: np.ndarray, mem_val: np.ndarray, mem_meta: np.ndarray,
-        *, chunk: int = 512) -> RunResult:
-    """Execute until global idle (or ``cfg.max_cycles``)."""
-    st = init_state(cfg, static_ams, amq_len, mem_val, mem_meta)
-    cyc = make_cycle_fn(cfg, prog)
+# ----------------------------------------------------------------------------
+# Batched on-device execution engine (design-space sweeps, Figs. 11–17)
+# ----------------------------------------------------------------------------
+# Compiled engines keyed by the static ``MachineConfig`` (plus the chunk
+# length and the module-level FIFO constants, which are baked into the
+# trace).  Repeated sweep points with the same fabric configuration reuse
+# both the Python-level engine and — because the program is a traced
+# argument — the underlying XLA executable.
+_ENGINE_CACHE: dict = {}
 
-    @functools.partial(jax.jit, donate_argnums=0)
-    def run_chunk(s):
-        def body(s, _):
-            s2 = jax.lax.cond(is_idle(s), lambda x: x, cyc, s)
-            return s2, ()
-        s, _ = jax.lax.scan(body, s, None, length=chunk)
-        return s, is_idle(s)
 
-    done = False
-    while int(st.cycle) < cfg.max_cycles:
-        st, idle = run_chunk(st)
-        if int(jnp.max(st.pend_n)) >= PEND_CAP - 2:
-            raise RuntimeError("pending-FIFO overflow: consumption guarantee "
-                               "violated (simulator invariant)")
-        if bool(idle):
-            done = True
-            break
+def clear_engine_cache() -> None:
+    """Drop all cached compiled engines (tests / benchmarking cold paths)."""
+    _ENGINE_CACHE.clear()
 
-    cycles = int(st.cycle)
+
+def enable_persistent_compile_cache(path: str | None = None) -> str | None:
+    """Opt-in on-disk XLA compilation cache for sweep entry points.
+
+    The in-memory engine cache amortizes compiles within a process; this
+    extends it across processes so re-running a sweep skips the one-time
+    engine compile entirely.  Best-effort: silently a no-op on jax builds
+    without the knobs.  Returns the cache dir actually set, or None.
+    """
+    import os
+    if path is None:
+        path = os.path.join(os.path.expanduser("~"), ".cache",
+                            "nexus-machine-xla")
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except (AttributeError, ValueError):
+        return None
+    return path
+
+
+def engine_cache_size() -> int:
+    return len(_ENGINE_CACHE)
+
+
+def _get_engine(cfg: MachineConfig, chunk: int):
+    """Batched runner ``engine(prog, st) -> (st, overflowed, idle)``.
+
+    ``prog`` is (B, P, CFG_F) and ``st`` a MachineState whose leaves carry a
+    leading batch dimension.  The whole run happens in ONE device call: a
+    ``lax.while_loop`` over jitted chunks of ``chunk`` cycles, terminating
+    when every lane is idle (or capped, or a lane trips the pending-FIFO
+    guard).  A lane that reaches idle freezes — its cycle counter and stats
+    stop advancing — so per-lane metrics match a solo :func:`run` exactly.
+    """
+    key = (cfg, chunk, PEND_CAP, STREAM_THROTTLE)
+    eng = _ENGINE_CACHE.get(key)
+    if eng is not None:
+        return eng
+    cyc = _make_cycle(cfg)
+
+    def lane_step(prog, st):
+        # Step unconditionally — on an idle lane the transition is a natural
+        # no-op for every state array (idle is absorbing: nothing buffered,
+        # queued, streaming, or left to inject) — and freeze only the cycle
+        # counter and statistics of inactive lanes.  A per-lane lax.cond
+        # would lower to a select over EVERY leaf under vmap, copying the
+        # multi-MB queue arrays each cycle; masking the cheap observable
+        # leaves keeps per-cycle cost independent of queue capacities.
+        active = (~is_idle(st)) & (st.cycle < cfg.max_cycles)
+        st2 = cyc(prog, st)
+
+        def keep(new, old):
+            return jnp.where(active, new, old)
+
+        return st2._replace(
+            cycle=keep(st2.cycle, st.cycle),
+            st_busy=keep(st2.st_busy, st.st_busy),
+            st_exec=keep(st2.st_exec, st.st_exec),
+            st_enroute=keep(st2.st_enroute, st.st_enroute),
+            st_stall=keep(st2.st_stall, st.st_stall),
+            st_hops=keep(st2.st_hops, st.st_hops),
+            st_inj=keep(st2.st_inj, st.st_inj),
+        )
+
+    step = jax.vmap(lane_step)
+
+    @functools.partial(jax.jit, donate_argnums=1)
+    def engine(prog, st):
+        def cond(carry):
+            s, over = carry
+            live = ~jax.vmap(is_idle)(s) & (s.cycle < cfg.max_cycles)
+            return live.any() & ~over.any()
+
+        def body(carry):
+            s, over = carry
+            def sub(s, _):
+                return step(prog, s), ()
+            s, _ = jax.lax.scan(sub, s, None, length=chunk)
+            # pending-FIFO high-water check at chunk granularity (the
+            # consumption-guarantee invariant, see PEND_CAP above).  Lanes
+            # already frozen at max_cycles are exempt: they keep being
+            # stepped while other lanes run (their non-stat state is
+            # undefined once completed=False), and their churn must not
+            # abort the healthy lanes.
+            high = jnp.max(s.pend_n, axis=1) >= PEND_CAP - 2
+            over = over | (high & (s.cycle < cfg.max_cycles))
+            return s, over
+
+        over0 = jnp.zeros(st.cycle.shape, jnp.bool_)
+        st, over = jax.lax.while_loop(cond, body, (st, over0))
+        return st, over, jax.vmap(is_idle)(st)
+
+    _ENGINE_CACHE[key] = engine
+    return engine
+
+
+def _lane_result(cfg: MachineConfig, st: MachineState, done: bool,
+                 b: int) -> RunResult:
+    cycles = int(np.asarray(st.cycle[b]))
     n = cfg.n_pes
-    busy = float(np.asarray(st.st_busy).sum()) / max(1, cycles * n)
-    executed = int(st.st_exec)
-    enroute = int(st.st_enroute)
+    per_pe_busy = np.asarray(st.st_busy[b])
+    executed = int(np.asarray(st.st_exec[b]))
+    enroute = int(np.asarray(st.st_enroute[b]))
     return RunResult(
         cycles=cycles,
-        mem_val=np.asarray(st.mem_val),
+        mem_val=np.asarray(st.mem_val[b]),
         utilization=executed / max(1, cycles * n),
-        busy_frac=busy,
-        per_pe_busy=np.asarray(st.st_busy),
+        busy_frac=float(per_pe_busy.sum()) / max(1, cycles * n),
+        per_pe_busy=per_pe_busy,
         executed=executed,
         enroute=enroute,
         enroute_frac=enroute / max(1, executed),
-        hops=int(st.st_hops),
-        injected=int(st.st_inj),
-        stall_per_port=np.asarray(st.st_stall),
+        hops=int(np.asarray(st.st_hops[b])),
+        injected=int(np.asarray(st.st_inj[b])),
+        stall_per_port=np.asarray(st.st_stall[b]),
         completed=done,
     )
+
+
+def run_many(cfg: MachineConfig, workloads, *,
+             chunk: int = 512) -> list[RunResult]:
+    """Simulate B workloads on one fabric configuration in a single batched
+    on-device run.
+
+    Args:
+      cfg: shared static machine parameters.  ``mem_words`` is widened
+        automatically when a lane's padded memory image is larger (padding
+        is semantically inert — see :mod:`repro.core.batch`).
+      workloads: a :class:`repro.core.batch.BatchedWorkloads`, or a sequence
+        of compiled workloads (anything with ``prog`` / ``static_ams`` /
+        ``amq_len`` / ``mem_val`` / ``mem_meta``, e.g.
+        :class:`repro.core.compiler.CompiledWorkload`) to stack and pad.
+
+    Returns:
+      One :class:`RunResult` per lane, in input order — metrics are exactly
+      what a solo :func:`run` of that workload would report.  A lane that
+      hits ``cfg.max_cycles`` without reaching idle returns
+      ``completed=False`` with its cycle counter and statistics frozen at
+      the cap; its ``mem_val`` (like any non-completed run's) is undefined.
+
+    Raises:
+      RuntimeError: if any lane trips the pending-FIFO overflow guard
+        (the consumption-guarantee invariant).
+    """
+    from repro.core.batch import BatchedWorkloads, stack_workloads
+    if not isinstance(workloads, BatchedWorkloads):
+        workloads = stack_workloads(workloads)
+    if workloads.n_pes != cfg.n_pes:
+        raise ValueError(f"batch compiled for {workloads.n_pes} PEs but cfg "
+                         f"has {cfg.n_pes}")
+    if workloads.mem_words > cfg.mem_words:
+        cfg = dataclasses.replace(cfg, mem_words=workloads.mem_words)
+
+    st = jax.vmap(functools.partial(init_state, cfg))(
+        jnp.asarray(workloads.static_ams, jnp.int32),
+        jnp.asarray(workloads.amq_len, jnp.int32),
+        jnp.asarray(workloads.mem_val, jnp.int32),
+        jnp.asarray(workloads.mem_meta, jnp.int32))
+    engine = _get_engine(cfg, chunk)
+    st, over, idle = engine(jnp.asarray(workloads.prog, jnp.int32), st)
+    over = np.asarray(over)
+    if over.any():
+        raise RuntimeError("pending-FIFO overflow: consumption guarantee "
+                           "violated (simulator invariant; lanes "
+                           f"{np.nonzero(over)[0].tolist()})")
+    idle = np.asarray(idle)
+    return [_lane_result(cfg, st, bool(idle[b]), b)
+            for b in range(workloads.batch)]
+
+
+def run(cfg: MachineConfig, prog: np.ndarray, static_ams: np.ndarray,
+        amq_len: np.ndarray, mem_val: np.ndarray, mem_meta: np.ndarray,
+        *, chunk: int = 512) -> RunResult:
+    """Execute until global idle (or ``cfg.max_cycles``).
+
+    Thin B=1 wrapper over :func:`run_many`: same engine, same compile
+    cache, identical metrics.
+    """
+    (res,) = run_many(
+        cfg, [(prog, static_ams, amq_len, mem_val, mem_meta)], chunk=chunk)
+    return res

@@ -1,0 +1,38 @@
+"""Version-compat shims for the jax API surface this repo spans.
+
+The code targets the current jax spelling of each API; this module maps it
+onto older releases (the container pins jax 0.4.x) so the same source runs
+on both.  Keep every version switch here — call sites import the symbol
+and stay version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level function
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with explicit Auto axis types where supported
+    (``axis_types`` and ``jax.sharding.AxisType`` only exist on newer
+    jax; older releases treat every axis as Auto already)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, devices=devices,
+                axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)

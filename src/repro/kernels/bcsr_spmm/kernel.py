@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.jax_compat import tpu_compiler_params
+
 
 def _kernel(row_ref, first_ref, idx_ref, blocks_ref, b_ref, o_ref):
     del idx_ref  # consumed by the index maps only
@@ -65,6 +67,6 @@ def pallas_call_bcsr(mb: int, bcap: int, bm: int, bn: int, bk: int,
         _kernel, grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((mb * bm, k_tiles * bk), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )

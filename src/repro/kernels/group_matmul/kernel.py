@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.jax_compat import tpu_compiler_params
+
 
 def _kernel(eid_ref, x_ref, w_ref, o_ref):
     del eid_ref
@@ -67,6 +69,6 @@ def pallas_call_group_matmul(m_tiles: int, tile_m: int, dk: int, fk: int,
         out_shape=jax.ShapeDtypeStruct((m_tiles * tile_m, f_tiles * fk),
                                        jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )

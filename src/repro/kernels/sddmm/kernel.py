@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.jax_compat import tpu_compiler_params
+
 
 def _kernel(brow_ref, bcol_ref, a_ref, b_ref, o_ref):
     del brow_ref, bcol_ref
@@ -63,6 +65,6 @@ def pallas_call_sddmm(bcap: int, bm: int, bn: int, dk: int, d_tiles: int,
         _kernel, grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((bcap, bm, bn), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )

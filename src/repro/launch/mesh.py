@@ -12,6 +12,8 @@ import numpy as np
 
 import jax
 
+from repro.jax_compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -22,14 +24,11 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"{n} devices needed, found {len(devs)} — run through "
             f"launch/dryrun.py (sets XLA_FLAGS before jax init)")
-    return jax.make_mesh(
-        shape, axes, devices=devs[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devs[:n])
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh on whatever devices exist (tests / examples)."""
-    axes = ("data", "model")
     n = data * model
-    return jax.make_mesh((data, model), axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"),
+                     devices=jax.devices()[:n])

@@ -233,7 +233,7 @@ def spmv_sharded(mesh, shards: dict, x: np.ndarray, *, axis: str = "data",
                                 num_segments=rows_per)
         return y[None]
 
-    from jax import shard_map
+    from repro.jax_compat import shard_map
     fn = shard_map(
         step, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis),

@@ -31,6 +31,7 @@ def built():
 
 
 @pytest.mark.parametrize("arch_id", ARCHS)
+@pytest.mark.slow
 def test_forward_shapes_and_finite(arch_id, built):
     cfg, params = built(arch_id)
     batch = synth_batch(cfg, B, S)
@@ -46,6 +47,7 @@ def test_forward_shapes_and_finite(arch_id, built):
 
 
 @pytest.mark.parametrize("arch_id", ARCHS)
+@pytest.mark.slow
 def test_train_step_no_nans(arch_id, built):
     cfg, params = built(arch_id)
     opt = adamw_init(params)
@@ -63,6 +65,7 @@ def test_train_step_no_nans(arch_id, built):
 
 @pytest.mark.parametrize("arch_id", [a for a in ARCHS
                                      if not configs.get_arch(a).encoder_only])
+@pytest.mark.slow
 def test_prefill_then_decode(arch_id, built):
     cfg, params = built(arch_id)
     cache_len = 32
@@ -78,6 +81,7 @@ def test_prefill_then_decode(arch_id, built):
         assert bool((nxt >= 0).all()) and bool((nxt < cfg.vocab).all())
 
 
+@pytest.mark.slow
 def test_decode_matches_prefill_logits():
     """KV-cache correctness: decoding token t+1 after prefill[0..t] must
     equal a longer prefill's next-token argmax (dense arch)."""

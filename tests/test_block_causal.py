@@ -3,12 +3,14 @@ identical to full masked attention."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models import layers as L
 from repro.models import mla as M
 from repro.models.config import MLACfg
 
 
+@pytest.mark.slow
 def test_sdpa_causal_skip_matches_full():
     key = jax.random.PRNGKey(0)
     b, h, kv, s, hd = 2, 4, 2, 1024, 16
@@ -33,6 +35,7 @@ def test_attention_layer_causal_skip_matches():
                                atol=2e-4)
 
 
+@pytest.mark.slow
 def test_mla_causal_skip_matches():
     cfg = MLACfg(kv_lora=32, rope_dim=16, nope_dim=32, v_dim=32)
     key = jax.random.PRNGKey(5)

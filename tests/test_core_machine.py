@@ -50,6 +50,7 @@ def test_spmv(mats):
     assert res.enroute > 0          # in-network computing actually fired
 
 
+@pytest.mark.slow
 def test_spmv_tia(mats):
     a, _, x = mats
     cfg = _cfg(opportunistic=False)
@@ -57,6 +58,7 @@ def test_spmv_tia(mats):
     assert res.enroute == 0         # ablation: no en-route execution
 
 
+@pytest.mark.slow
 def test_spmv_tia_valiant(mats):
     a, _, x = mats
     cfg = _cfg(opportunistic=False, valiant=True)
@@ -88,6 +90,7 @@ def test_matmul_dense():
     _run(compiler.build_matmul(ad, bd, _cfg()), _cfg())
 
 
+@pytest.mark.slow
 def test_conv():
     xc = RNG.integers(-2, 3, size=(7, 7, 2))
     wc = RNG.integers(-2, 3, size=(3, 3, 2, 3))
@@ -122,6 +125,7 @@ def powerlaw_sparse(m, n, rng, alpha=2.0):
     return a
 
 
+@pytest.mark.slow
 def test_nexus_beats_tia_utilization_on_skewed_load():
     """The paper's core claim (Fig. 13): opportunistic execution raises
     fabric utilization (and cuts cycles) under load imbalance.  Tiny
@@ -139,6 +143,7 @@ def test_nexus_beats_tia_utilization_on_skewed_load():
     assert r_nx.enroute_frac > 0.05
 
 
+@pytest.mark.slow
 def test_larger_array_scales():
     """8x8 fabric still correct (Fig. 17 scaling axis)."""
     cfg = machine.MachineConfig(width=8, height=8, mem_words=512,

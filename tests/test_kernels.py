@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 from repro.kernels import bcsr_spmm, group_matmul, grouped_expert_matmul, \
     sddmm_blocks

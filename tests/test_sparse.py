@@ -4,7 +4,7 @@ import sys
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp
@@ -157,6 +157,7 @@ def test_steal_overflow_rebalances():
     assert counts.max() <= 4
 
 
+@pytest.mark.slow
 def test_spmv_sharded_single_device():
     a = _rand_sparse(24, 24, 0.35)
     x = RNG.standard_normal(24).astype(np.float32)

@@ -7,6 +7,7 @@ from repro.launch.serve import serve_batch
 from repro.launch.train import train
 
 
+@pytest.mark.slow
 def test_train_runs_and_loss_decreases(tmp_path):
     res = train("stablelm-3b", steps=10, batch=4, seq=32,
                 ckpt_dir=str(tmp_path), save_every=5, log_every=0)
@@ -17,6 +18,7 @@ def test_train_runs_and_loss_decreases(tmp_path):
     assert np.mean(res.losses[-3:]) < np.mean(res.losses[:3])
 
 
+@pytest.mark.slow
 def test_train_recovers_from_failure(tmp_path):
     res = train("stablelm-3b", steps=12, batch=4, seq=32,
                 ckpt_dir=str(tmp_path), save_every=4, fail_at_step=9,
@@ -26,6 +28,7 @@ def test_train_recovers_from_failure(tmp_path):
     assert np.isfinite(res.final_loss)
 
 
+@pytest.mark.slow
 def test_train_recovery_is_deterministic(tmp_path):
     """Checkpoint/restore must reproduce the uninterrupted run exactly:
     same data stream, same params -> same final loss."""
@@ -39,12 +42,14 @@ def test_train_recovery_is_deterministic(tmp_path):
                                rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_train_without_checkpoint_restarts_from_scratch():
     res = train("stablelm-3b", steps=6, batch=2, seq=32, ckpt_dir=None,
                 fail_at_step=3, log_every=0)
     assert res.steps_done == 6 and res.restarts == 1
 
 
+@pytest.mark.slow
 def test_train_moe_arch(tmp_path):
     """MoE path (AM dispatch + load stealing) trains and checkpoints."""
     res = train("phi3.5-moe-42b-a6.6b", steps=4, batch=4, seq=16,
@@ -52,6 +57,7 @@ def test_train_moe_arch(tmp_path):
     assert res.steps_done == 4 and np.isfinite(res.final_loss)
 
 
+@pytest.mark.slow
 def test_serve_batch_continuous():
     rng = np.random.default_rng(0)
     reqs = [rng.integers(1, 500, size=(8,)) for _ in range(5)]
