@@ -16,6 +16,9 @@ SPARSE = ["spmspm_s1", "spmspm_s2", "spmspm_s3", "spmspm_s4", "spmv",
 DENSE = ["matmul", "mv", "conv"]
 GRAPH = ["bfs", "sssp", "pagerank"]
 
+# baseline column -> printed width (tia_valiant / systolic are wider)
+BASELINES = (("cgra", 9), ("tia", 9), ("tia_valiant", 11), ("systolic", 12))
+
 
 def main(table=None):
     table = table or run_all()
@@ -26,41 +29,36 @@ def main(table=None):
     hdr = (f"{'workload':<14}{'sparsity':<14}{'vs cgra':>9}{'vs tia':>9}"
            f"{'vs tia-val':>11}{'vs systolic':>12}{'in-net %':>10}")
     print(hdr)
-    ratios = {"cgra": [], "tia": [], "tia_valiant": [], "systolic": []}
+    ratios = {base: [] for base, _ in BASELINES}
     sparse_cgra = []
     for name, e in table.items():
         nx = e["archs"]["nexus"]["cycles"]
         cols = {}
-        for base in ("cgra", "tia", "tia_valiant", "systolic"):
+        for base, width in BASELINES:
             if base in e["archs"]:
                 r = e["archs"][base]["cycles"] / nx
-                cols[base] = f"{r:9.2f}" if base != "tia_valiant" \
-                    else f"{r:11.2f}"
-                if base != "systolic":
-                    ratios[base].append(r)
-                else:
-                    ratios[base].append(r)
+                cols[base] = f"{r:{width}.2f}"
+                ratios[base].append(r)
                 if base == "cgra" and name in SPARSE:
                     sparse_cgra.append(r)
             else:
-                cols[base] = " " * (11 if base == "tia_valiant" else
-                                    12 if base == "systolic" else 9) + ""
-                cols[base] = f"{'n/a':>9}" if base in ("cgra",) else \
-                    f"{'n/a':>11}" if base == "tia_valiant" else f"{'n/a':>12}"
+                # missing baseline (e.g. no CGRA model for this workload):
+                # print n/a, keep it out of the geomeans.
+                cols[base] = f"{'n/a':>{width}}"
         innet = 100 * e["archs"]["nexus"]["enroute_frac"]
-        print(f"{name:<14}{e['sparsity']:<14}{cols['cgra']}"
-              f"{e['archs']['tia']['cycles']/nx:9.2f}"
+        print(f"{name:<14}{e['sparsity']:<14}{cols['cgra']}{cols['tia']}"
               f"{cols['tia_valiant']}{cols['systolic']}{innet:>9.0f}%")
 
-    sota = [e["archs"]["tia"]["cycles"] / e["archs"]["nexus"]["cycles"]
-            for e in table.values()]
     print("-" * 78)
-    print(f"geomean speedup vs generic CGRA (sparse): "
-          f"{geomean(sparse_cgra):.2f}x   (paper: ~1.9x)")
-    print(f"geomean speedup vs SOTA (TIA), all workloads: "
-          f"{geomean(sota):.2f}x   (paper: 1.35x avg)")
-    return dict(sparse_vs_cgra=geomean(sparse_cgra),
-                all_vs_tia=geomean(sota))
+    sparse_vs_cgra = geomean(sparse_cgra) if sparse_cgra else None
+    all_vs_tia = geomean(ratios["tia"]) if ratios["tia"] else None
+    print("geomean speedup vs generic CGRA (sparse): "
+          + (f"{sparse_vs_cgra:.2f}x" if sparse_vs_cgra else "n/a")
+          + "   (paper: ~1.9x)")
+    print("geomean speedup vs SOTA (TIA), all workloads: "
+          + (f"{all_vs_tia:.2f}x" if all_vs_tia else "n/a")
+          + "   (paper: 1.35x avg)")
+    return dict(sparse_vs_cgra=sparse_vs_cgra, all_vs_tia=all_vs_tia)
 
 
 if __name__ == "__main__":

@@ -32,16 +32,22 @@ def main(table=None):
                 row += f"{'n/a':>{9 if arch == 'tia_valiant' else 8}}"
         bal = []
         for arch in ("nexus", "tia"):
-            b = np.asarray(e["archs"][arch]["per_pe_busy"], np.float64)
-            bal.append(b.max() / max(b.mean(), 1))
-        print(row + f"   nx {bal[0]:.2f} / tia {bal[1]:.2f}")
-        if name in IRREGULAR:
+            if arch in e["archs"] and "per_pe_busy" in e["archs"][arch]:
+                b = np.asarray(e["archs"][arch]["per_pe_busy"], np.float64)
+                bal.append(f"{b.max() / max(b.mean(), 1):.2f}")
+            else:
+                bal.append("n/a")
+        print(row + f"   nx {bal[0]} / tia {bal[1]}")
+        if (name in IRREGULAR and "nexus" in e["archs"]
+                and "tia" in e["archs"]):
             gains.append(e["archs"]["nexus"]["utilization"]
                          / max(e["archs"]["tia"]["utilization"], 1e-9))
     print("-" * 78)
-    print(f"geomean utilization gain vs TIA (irregular): "
-          f"{geomean(gains):.2f}x   (paper: ~1.7x vs SOTA)")
-    return dict(util_vs_tia=geomean(gains))
+    vs_tia = geomean(gains) if gains else None
+    print("geomean utilization gain vs TIA (irregular): "
+          + (f"{vs_tia:.2f}x" if vs_tia else "n/a")
+          + "   (paper: ~1.7x vs SOTA)")
+    return dict(util_vs_tia=vs_tia)
 
 
 if __name__ == "__main__":

@@ -23,7 +23,9 @@ def main(table=None):
           + f"{'total nx/tia':>14}")
     ratios = []
     for name in IRREGULAR:
-        e = table[name]
+        e = table.get(name)
+        if e is None or not {"nexus", "tia"} <= e["archs"].keys():
+            continue  # partial table (e.g. smoke grid): skip, don't crash
         nx = np.asarray(e["archs"]["nexus"]["stall_per_port"], np.float64)
         ti = np.asarray(e["archs"]["tia"]["stall_per_port"], np.float64)
         rel = nx / np.maximum(ti, 1)
@@ -32,9 +34,10 @@ def main(table=None):
         print(f"{name:<14}" + "".join(f"{r:>8.2f}" for r in rel)
               + f"{tot:>14.2f}")
     print("-" * 78)
-    avg = float(np.mean(ratios))
-    print(f"mean congestion, Nexus / TIA: {avg:.2f} "
-          f"(<1 = Nexus less congested; paper: lower avg congestion)")
+    avg = float(np.mean(ratios)) if ratios else None
+    print("mean congestion, Nexus / TIA: "
+          + (f"{avg:.2f}" if avg is not None else "n/a")
+          + " (<1 = Nexus less congested; paper: lower avg congestion)")
     return dict(congestion_vs_tia=avg)
 
 

@@ -1,10 +1,17 @@
 """Shared benchmark harness: run every workload on every architecture once,
 cache the raw numbers; the per-figure scripts format slices of this table.
 
+The whole paper-figure grid — workload axis x fabric-mode axis (Nexus /
+TIA / TIA-Valiant) — is stacked into the lanes of ONE ``machine.run_many``
+call: the execution mode is per-lane runtime data to the compiled engine
+(see ``repro.core.machine.FABRIC_MODES``), so the full Figs. 11-14 suite
+costs one engine compile and one device call.
+
 Results land in experiments/bench/results.json.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -13,24 +20,29 @@ import numpy as np
 
 from benchmarks.workloads import Workload, make_all
 from repro.core import machine
-from repro.core.machine import MachineConfig
+from repro.core.machine import FABRIC_MODES, MachineConfig
 from repro.core.metrics import POWER_MW, FREQ_HZ
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
 RESULTS = os.path.join(OUT_DIR, "results.json")
 
-FABRIC_MODES = {
-    "nexus": {},
-    # TIA baselines: no in-network execution, triggered (single-issue)
-    # dispatch, and standard equal-rows data placement — the three costs
-    # the Nexus design removes (§2.2 / §3.6; Alg. 1 is a Nexus-compiler
-    # contribution the paper does not grant its baselines).
-    "tia": dict(opportunistic=False, dual_issue=False),
-    "tia_valiant": dict(opportunistic=False, dual_issue=False,
-                        valiant=True),
-}
+# Data placement per architecture: Alg. 1 (dissimilarity) is a
+# Nexus-compiler contribution the paper does not grant its baselines —
+# TIA runs with standard equal-rows placement (§2.2 / §3.6).
 PLACEMENT = {"nexus": "dissimilarity", "tia": "rows", "tia_valiant": "rows"}
+
+
+def _placement_for(mode) -> str:
+    """Placement strategy for a lane mode (name or bitmask).
+
+    Named paper architectures use the PLACEMENT table; ablation bitmasks
+    follow the same rule — Alg. 1 placement goes with the Nexus execution
+    model (opportunistic lanes), equal rows with the baselines."""
+    if isinstance(mode, str) and mode in PLACEMENT:
+        return PLACEMENT[mode]
+    code = machine.resolve_mode(mode)
+    return "dissimilarity" if code & machine.MODE_OPPORTUNISTIC else "rows"
 
 
 def _result_row(res, batch_wall: float) -> dict:
@@ -43,11 +55,56 @@ def _result_row(res, batch_wall: float) -> dict:
         stall_total=int(stall.sum()),
         stall_per_port=stall.sum(axis=0).tolist(),
         per_pe_busy=np.asarray(res.per_pe_busy).tolist(),
-        # wall-clock of the whole batched mode sweep this row ran in —
+        # wall-clock of the whole batched grid this row ran in —
         # per-workload wall time is not individually measurable in a
         # batched run.
         batch_wall_s=batch_wall,
     )
+
+
+def run_grid(wls: list[Workload], modes=None, *,
+             base_cfg: MachineConfig | None = None,
+             max_cycles: int = 400_000) -> dict[str, list[dict]]:
+    """Run the full (workload x fabric-mode) grid in ONE batched device
+    call.
+
+    Lanes are stacked mode-major (all workloads on ``modes[0]``, then all
+    on ``modes[1]``, ...) with the per-lane mode vector threaded through
+    ``machine.run_many`` — one compiled engine serves every grid point.
+    ``modes`` entries may be ``FABRIC_MODES`` names or raw mode bitmasks
+    (ablation lanes).  Returns ``{mode: [result-row per workload, in
+    input order]}`` keyed by the modes as given.
+    """
+    modes = list(FABRIC_MODES) if modes is None else list(modes)
+    base_cfg = base_cfg or MachineConfig()
+    built, lane_modes = [], []
+    lane_cache: dict = {}   # modes sharing a placement reuse built lanes
+    for mode in modes:
+        placement = _placement_for(mode)
+        for i, wl in enumerate(wls):
+            if (i, placement) not in lane_cache:
+                cfg = dataclasses.replace(base_cfg, mem_words=wl.mem_words,
+                                          max_cycles=max_cycles)
+                lane_cache[i, placement] = wl.build(cfg, placement)
+            built.append(lane_cache[i, placement])
+            lane_modes.append(mode)
+    run_cfg = dataclasses.replace(
+        base_cfg, mem_words=max(wl.mem_words for wl in wls),
+        max_cycles=max_cycles)
+    t0 = time.time()
+    results = machine.run_many(run_cfg, built, modes=lane_modes)
+    wall = time.time() - t0
+    out: dict[str, list[dict]] = {}
+    lanes = iter(zip(built, results))
+    for mode in modes:
+        rows = []
+        for wl in wls:
+            b, res = next(lanes)
+            assert res.completed, f"{wl.name} on {mode}: no global idle"
+            assert b.check(res.mem_val), f"{wl.name} on {mode}: WRONG RESULT"
+            rows.append(_result_row(res, wall))
+        out[mode] = rows
+    return out
 
 
 def run_fabric(wl: Workload, mode: str) -> dict:
@@ -56,42 +113,19 @@ def run_fabric(wl: Workload, mode: str) -> dict:
 
 
 def run_fabric_batch(wls: list[Workload], mode: str) -> list[dict]:
-    """Run many workloads on one fabric mode in a single batched device
-    call (machine.run_many): the whole workload axis of the sweep grid
-    advances together, and one compiled engine serves every lane."""
-    base = FABRIC_MODES[mode]
-    built = []
-    for wl in wls:
-        cfg = MachineConfig(mem_words=wl.mem_words, max_cycles=400_000,
-                            **base)
-        built.append(wl.build(cfg, PLACEMENT[mode]))
-    run_cfg = MachineConfig(mem_words=max(wl.mem_words for wl in wls),
-                            max_cycles=400_000, **base)
-    t0 = time.time()
-    results = machine.run_many(run_cfg, built)
-    wall = time.time() - t0
-    rows = []
-    for wl, b, res in zip(wls, built, results):
-        assert res.completed, f"{wl.name} on {mode}: no global idle"
-        assert b.check(res.mem_val), f"{wl.name} on {mode}: WRONG RESULT"
-        rows.append(_result_row(res, wall))
-    return rows
+    """One fabric mode over many workloads — a single-row slice of
+    :func:`run_grid` (same batched engine path)."""
+    return run_grid(wls, [mode])[mode]
 
 
-def run_all(*, force: bool = False, verbose: bool = True) -> dict:
-    os.makedirs(OUT_DIR, exist_ok=True)
-    if os.path.exists(RESULTS) and not force:
-        with open(RESULTS) as f:
-            return json.load(f)
-
-    wls = make_all()
-    fabric_rows = {mode: run_fabric_batch(wls, mode)
-                   for mode in FABRIC_MODES}
+def build_table(wls: list[Workload], fabric_rows: dict[str, list[dict]],
+                *, verbose: bool = True) -> dict:
+    """Assemble the per-workload results table the fig scripts consume."""
     table: dict = {}
     for i, wl in enumerate(wls):
         entry: dict = {"useful_ops": wl.useful_ops,
                        "sparsity": wl.sparsity_note, "archs": {}}
-        for mode in FABRIC_MODES:
+        for mode in fabric_rows:
             r = fabric_rows[mode][i]
             entry["archs"][mode] = r
             if verbose:
@@ -114,6 +148,18 @@ def run_all(*, force: bool = False, verbose: bool = True) -> dict:
                 utilization=float(min(1.0, wl.useful_ops /
                                       (wl.systolic_cycles * 16))))
         table[wl.name] = entry
+    return table
+
+
+def run_all(*, force: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    if os.path.exists(RESULTS) and not force:
+        with open(RESULTS) as f:
+            return json.load(f)
+
+    wls = make_all()
+    fabric_rows = run_grid(wls)
+    table = build_table(wls, fabric_rows, verbose=verbose)
 
     with open(RESULTS, "w") as f:
         json.dump(table, f, indent=1)

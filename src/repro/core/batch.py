@@ -17,6 +17,12 @@ shapes, so this module pads each lane to the common maximum:
 Padding is therefore semantically inert: a padded lane steps through
 exactly the same per-cycle transitions as its solo run, so batched metrics
 are bit-identical to sequential ones (asserted in tests/test_batch.py).
+
+Besides the workload arrays a batch may carry a per-lane **fabric mode**
+vector (``modes``, (B,) int32 bitmasks — see
+:data:`repro.core.machine.FABRIC_MODES`): the execution mode is runtime
+data to the compiled engine, so one batch can mix Nexus / TIA /
+TIA-Valiant lanes and still run in a single device call.
 """
 from __future__ import annotations
 
@@ -38,6 +44,8 @@ class BatchedWorkloads:
     amq_len: np.ndarray     # (B, N)
     mem_val: np.ndarray     # (B, N, M)
     mem_meta: np.ndarray    # (B, N, M, 2)
+    modes: np.ndarray | None = None  # (B,) fabric-mode bitmasks, or None
+                                     # (= every lane runs the cfg default)
 
     @property
     def batch(self) -> int:
@@ -71,13 +79,17 @@ def bucket(n: int, step: int = PROG_BUCKET) -> int:
     return max(step, -(-n // step) * step)
 
 
-def stack_workloads(workloads) -> BatchedWorkloads:
+def stack_workloads(workloads, modes=None) -> BatchedWorkloads:
     """Stack compiled workloads into one padded batch.
 
     Accepts anything with ``prog`` / ``static_ams`` / ``amq_len`` /
     ``mem_val`` / ``mem_meta`` attributes (e.g.
     :class:`repro.core.compiler.CompiledWorkload`) or bare 5-tuples in that
     order.  Every lane must target the same fabric size (same PE count).
+
+    ``modes`` optionally assigns each lane a fabric mode — a sequence of
+    :data:`repro.core.machine.FABRIC_MODES` names and/or mode bitmasks,
+    one per workload — carried on the batch for ``run_many``.
     """
     rows = []
     for wl in workloads:
@@ -94,6 +106,13 @@ def stack_workloads(workloads) -> BatchedWorkloads:
             raise ValueError(f"lane {i} compiled for {r[1].shape[0]} PEs, "
                              f"lane 0 for {n}: fabric sizes must match "
                              "(batch per mesh size)")
+    mode_arr = None
+    if modes is not None:
+        from repro.core.machine import resolve_mode
+        mode_arr = np.asarray([resolve_mode(m_) for m_ in modes], np.int32)
+        if mode_arr.shape[0] != len(rows):
+            raise ValueError(f"{mode_arr.shape[0]} modes for {len(rows)} "
+                             "workloads")
     p = bucket(max(r[0].shape[0] for r in rows))
     q = max(r[1].shape[1] for r in rows)
     m = max(r[3].shape[1] for r in rows)
@@ -107,5 +126,6 @@ def stack_workloads(workloads) -> BatchedWorkloads:
                           for r in rows]),
         mem_meta=np.stack([pad_axis(np.asarray(r[4], np.int32), m, 1)
                            for r in rows]),
+        modes=mode_arr,
     )
 

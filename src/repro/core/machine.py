@@ -28,6 +28,31 @@ Simplifications (documented per DESIGN.md §2): single-cycle router / ALU /
 SRAM; arithmetic in int32 without 16-bit wraparound (test data is kept in
 range); off-chip refill of AM queues is modeled by the queue itself (loading
 is overlapped with execution per §3.3.3, so steady-state behaviour matches).
+
+Fabric modes as runtime data (the per-lane mode axis)
+-----------------------------------------------------
+The paper's cross-architecture comparisons (Figs. 11-14) run the *same*
+workloads on Nexus, TIA and TIA-Valiant.  Those three execution models
+differ only in the ``opportunistic`` / ``dual_issue`` / ``valiant``
+behaviours, so the simulator encodes them as a per-lane **mode bitmask**
+(:data:`MODE_OPPORTUNISTIC` | :data:`MODE_DUAL_ISSUE` |
+:data:`MODE_VALIANT`) that is a *traced* argument of the compiled engine —
+mode-dependent behaviour is masked dataflow (``jnp.where``), not Python
+branching.  :data:`FABRIC_MODES` names the three paper architectures
+(``nexus``/``tia``/``tia_valiant``) and maps them to mode codes; arbitrary
+bitmask combinations (e.g. opportunistic-off but dual-issue-on ablations)
+are equally valid lanes.  One compiled engine therefore serves the whole
+(workload x mode) grid: :func:`run_many` accepts per-lane ``modes`` and
+the engine-cache key ignores the mode flags entirely.
+
+What stays *static* (compile-time) in :class:`MachineConfig`: the fabric
+geometry (``width``/``height``), memory and queue capacities
+(``mem_words``/``queue_cap``/``stream_wait_cap``), and ``max_cycles`` —
+anything that changes array shapes or trip counts.  The three mode flags
+remain on :class:`MachineConfig` as the *default* mode for lanes that do
+not specify one, and — with ``traced_modes=False`` — as a fallback that
+bakes the mode into the trace exactly like the pre-traced-mode engines
+(kept for golden equivalence testing; one compile per mode).
 """
 from __future__ import annotations
 
@@ -61,6 +86,61 @@ OUT_LOCAL = 4      # "output port" id meaning ejection to the Input NI
 # generation rate ... is determined by the backpressure signal").
 PEND_CAP = 512
 STREAM_THROTTLE = 8   # stream unit pauses while pending queue is this deep
+# The three producers into the pending FIFO are gated so that its occupancy
+# provably never exceeds PEND_CAP (see the reservation comments in
+# _make_cycle): the stream gate checks the *post-execution-push* count, so
+# it needs STREAM_THROTTLE < PEND_CAP; the execution units need 2 slots on
+# top of the guard's high-water margin.  Checked here once because the
+# constants are module-level (tests monkeypatch them to force violations).
+assert STREAM_THROTTLE <= PEND_CAP - 3, "stream throttle must sit below cap"
+
+# --- fabric execution modes (per-lane runtime data) -------------------------
+# Bitmask encoding of the three mode behaviours.  The mode travels with the
+# lane through the compiled engine as a traced (B,) int32 vector, so every
+# (workload x mode) sweep point shares ONE XLA executable.
+MODE_OPPORTUNISTIC = 1   # in-network execution on idle PEs en route (§3.1.3)
+MODE_DUAL_ISSUE = 2      # decode + compute units retire in the same cycle
+MODE_VALIANT = 4         # randomized minimal-path (ROMM) injection routing
+
+MODE_NEXUS = MODE_OPPORTUNISTIC | MODE_DUAL_ISSUE
+MODE_TIA = 0
+MODE_TIA_VALIANT = MODE_VALIANT
+
+#: The paper's three fabric architectures, by name, in Fig. 11-14 order.
+FABRIC_MODES = {
+    "nexus": MODE_NEXUS,
+    "tia": MODE_TIA,
+    "tia_valiant": MODE_TIA_VALIANT,
+}
+
+
+def resolve_mode(mode) -> int:
+    """Mode name (``FABRIC_MODES`` key) or raw bitmask -> int code."""
+    if isinstance(mode, str):
+        try:
+            return FABRIC_MODES[mode]
+        except KeyError:
+            raise ValueError(f"unknown fabric mode {mode!r}; known: "
+                             f"{sorted(FABRIC_MODES)}") from None
+    code = int(mode)
+    if not 0 <= code < 8:
+        raise ValueError(f"mode bitmask out of range: {code}")
+    return code
+
+
+def mode_code(cfg: "MachineConfig") -> int:
+    """The mode bitmask a config's flags describe (its default lane mode)."""
+    return ((MODE_OPPORTUNISTIC if cfg.opportunistic else 0)
+            | (MODE_DUAL_ISSUE if cfg.dual_issue else 0)
+            | (MODE_VALIANT if cfg.valiant else 0))
+
+
+def mode_flags(mode) -> dict:
+    """Inverse of :func:`mode_code`: bitmask/name -> MachineConfig kwargs."""
+    code = resolve_mode(mode)
+    return dict(opportunistic=bool(code & MODE_OPPORTUNISTIC),
+                dual_issue=bool(code & MODE_DUAL_ISSUE),
+                valiant=bool(code & MODE_VALIANT))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +161,12 @@ class MachineConfig:
     # the TIA baselines run with dual_issue=False.
     dual_issue: bool = True
     max_cycles: int = 200_000
+    # The mode flags above are *runtime data* to the compiled engine (see
+    # module docstring): with traced_modes=True (default) they only pick the
+    # default lane mode and the engine-cache key ignores them.  Setting
+    # traced_modes=False bakes them into the trace as Python branches — the
+    # pre-traced static engines, kept as the golden reference path.
+    traced_modes: bool = True
 
     @property
     def n_pes(self) -> int:
@@ -239,13 +325,17 @@ def _anchor_tia(nxt: jnp.ndarray, pe_ids: jnp.ndarray) -> jnp.ndarray:
 # One clock cycle
 # ----------------------------------------------------------------------------
 def _make_cycle(cfg: MachineConfig):
-    """Build the program-parametric single-cycle transition.
+    """Build the program- and mode-parametric single-cycle transition.
 
-    Returns ``cycle(prog_j, st) -> st`` where ``prog_j`` is the replicated
-    configuration memory as a *traced* ``(P, CFG_F)`` array.  Keeping the
-    program out of the trace constants means one compiled engine serves
-    every workload with the same shapes — the sweep compile cache in
-    :func:`run_many` relies on this.
+    Returns ``cycle(prog_j, mode, st) -> st`` where ``prog_j`` is the
+    replicated configuration memory as a *traced* ``(P, CFG_F)`` array and
+    ``mode`` a *traced* int32 mode bitmask (see :data:`FABRIC_MODES`).
+    Keeping both the program and the execution mode out of the trace
+    constants means one compiled engine serves every (workload x mode)
+    point with the same shapes — the sweep compile cache in
+    :func:`run_many` relies on this.  With ``cfg.traced_modes=False`` the
+    mode argument is ignored and the config's mode flags are baked in as
+    Python branches (the golden static path).
     """
     n, w = cfg.n_pes, cfg.width
     nbr_np, opp_np = cfg.neighbor_maps()
@@ -284,7 +374,32 @@ def _make_cycle(cfg: MachineConfig):
                                 jnp.where(dy != 0, ns, OUT_LOCAL))))
         return port.astype(jnp.int32)
 
-    def cycle(prog_j: jnp.ndarray, st: MachineState) -> MachineState:
+    def cycle(prog_j: jnp.ndarray, mode: jnp.ndarray,
+              st: MachineState) -> MachineState:
+        if cfg.traced_modes:
+            # Traced scalars: mode-dependent behaviour below is masked
+            # dataflow, identical bit-for-bit to the static branches.
+            opp_on = (mode & MODE_OPPORTUNISTIC) != 0
+            dual_on = (mode & MODE_DUAL_ISSUE) != 0
+            val_on = (mode & MODE_VALIANT) != 0
+        else:
+            opp_on, dual_on, val_on = (cfg.opportunistic, cfg.dual_issue,
+                                       cfg.valiant)
+
+        def pick_mode(pred, on, off):
+            """Static short-circuit for Python-bool preds, masked select
+            (pytree-mapped) for traced ones."""
+            if isinstance(pred, bool):
+                return on() if pred else off()
+            return jax.tree_util.tree_map(
+                lambda a, b: jnp.where(pred, a, b), on(), off())
+
+        def maybe_anchor(msgs):
+            # TIA anchoring (compute stays with the data) applies exactly
+            # when the lane is NOT opportunistic.
+            return pick_mode(opp_on, lambda: msgs,
+                             lambda: _anchor_tia(msgs, pe_ids))
+
         heads = st.buf[:, :, 0, :]                     # (N,5,F)
         head_v = st.buf_n > 0                          # (N,5)
 
@@ -335,26 +450,44 @@ def _make_cycle(cfg: MachineConfig):
         mem_cand = local_a & is_mem_op(opn_a) & \
             ((pend_free >= 1)[:, None, None] | no_emit_a) & \
             (~stream_a | swq_ok[:, None, None])          # (N,5,D)
-        # the compute unit's output always re-enters the pending FIFO; with
-        # dual issue + stream emission up to 3 pushes/cycle, so reserve room.
+        # Pending-FIFO reservation discipline (the consumption guarantee,
+        # §3.4).  Three producers may push in one cycle — decode output,
+        # compute output, stream spawn — and each is gated so occupancy
+        # provably never exceeds PEND_CAP:
+        #   * decode emits only with >= 1 free slot;
+        #   * compute emits only with >= 2 free slots (its own push PLUS a
+        #     same-cycle decode push: after both, pend_n <= PEND_CAP);
+        #   * the stream gate checks the *post-execution-push* count
+        #     against STREAM_THROTTLE (<= PEND_CAP - 3, asserted at module
+        #     scope), far below the cap.
+        # The run_many overflow guard trips at pend_n >= PEND_CAP - 2: the
+        # shallowest depth from which one more uncompensated cycle could
+        # gate an execution unit — i.e. consumption would no longer be
+        # unconditional (tests/test_pend_guard.py holds the invariant).
         alu_cand = local_a & is_alu_op(opn_a) & \
             (pend_free >= 2)[:, None, None]
-        if cfg.dual_issue:
-            sel_mem3 = _pick_one(mem_cand.reshape(n, PORTS * DEPTH),
-                                 st.rr).reshape(n, PORTS, DEPTH)
-            sel_alu3 = _pick_one(alu_cand.reshape(n, PORTS * DEPTH),
-                                 st.rr + 2).reshape(n, PORTS, DEPTH)
-        else:
+
+        def sel_dual():
+            # separate decode + compute units (Fig. 8b): one of each may
+            # retire per cycle.
+            return (_pick_one(mem_cand.reshape(n, PORTS * DEPTH),
+                              st.rr).reshape(n, PORTS, DEPTH),
+                    _pick_one(alu_cand.reshape(n, PORTS * DEPTH),
+                              st.rr + 2).reshape(n, PORTS, DEPTH))
+
+        def sel_single():
             # TIA triggered dispatch: the priority encoder fires ONE ready
             # instruction per PE per cycle (either unit).
             sel_one = _pick_one((mem_cand | alu_cand)
                                 .reshape(n, PORTS * DEPTH),
                                 st.rr).reshape(n, PORTS, DEPTH)
-            sel_mem3 = sel_one & is_mem_op(opn_a)
-            sel_alu3 = sel_one & is_alu_op(opn_a)
+            return sel_one & is_mem_op(opn_a), sel_one & is_alu_op(opn_a)
+
+        sel_mem3, sel_alu3 = pick_mode(dual_on, sel_dual, sel_single)
         any_alu_local = sel_alu3.any(axis=(1, 2))
         opn = heads[:, :, F_OP]
-        if cfg.opportunistic:
+
+        def sel_opportunistic():
             # in-network computing: an idle compute unit intercepts a
             # passing ALU-class message whose operands are complete (head
             # only).  Interception happens *in the router pipeline*: the
@@ -367,9 +500,10 @@ def _make_cycle(cfg: MachineConfig):
                      & (heads[:, :, F_OP1C] == 1) & (heads[:, :, F_OP2C] == 1)
                      & (head_next_op != OP_NOP))
             icand &= (~any_alu_local)[:, None]
-            sel_icept = _pick_one(icand, st.rr + 1)
-        else:
-            sel_icept = jnp.zeros((n, PORTS), dtype=jnp.bool_)
+            return _pick_one(icand, st.rr + 1)
+
+        sel_icept = pick_mode(opp_on, sel_opportunistic,
+                              lambda: jnp.zeros((n, PORTS), dtype=jnp.bool_))
         icept3 = sel_icept[:, :, None] & (jnp.arange(DEPTH) == 0)[None, None, :]
         sel_alu3 = sel_alu3 | icept3
         # removal mask: locally-executed messages leave their FIFO;
@@ -429,8 +563,7 @@ def _make_cycle(cfg: MachineConfig):
         rot = cfg_row[:, C_ROTATE] == 1
         nxt = jnp.where(rot[:, None], _rotate_dsts(nxt), nxt)
         nxt = nxt.at[:, F_VIA].set(-1)  # execution starts a fresh leg
-        if not cfg.opportunistic:
-            nxt = _anchor_tia(nxt, pe_ids)
+        nxt = maybe_anchor(nxt)
         # Conditional continuations read the stored word's metadata:
         #   BFS: next level = Op1+1, stream the discovered vertex's adjacency
         #   SSSP: propagate the improved distance.
@@ -472,8 +605,7 @@ def _make_cycle(cfg: MachineConfig):
         rot_a = (cfg_row_a[:, C_ROTATE] == 1) | anchored_exec
         nxt_a = jnp.where(rot_a[:, None], _rotate_dsts(nxt_a), nxt_a)
         nxt_a = nxt_a.at[:, F_VIA].set(-1)
-        if not cfg.opportunistic:
-            nxt_a = _anchor_tia(nxt_a, pe_ids)
+        nxt_a = maybe_anchor(nxt_a)
         emits_a = mv_alu & (cfg_row_a[:, C_OP] != OP_NOP)
         nxt_a = nxt_a.at[:, F_VALID].set(jnp.where(emits_a, 1, 0))
 
@@ -564,8 +696,7 @@ def _make_cycle(cfg: MachineConfig):
         sp = sp.at[:, F_DST2].set(
             jnp.where(use_meta_dst, t[:, F_DST2], rot_t[:, F_DST2]))
         sp = sp.at[:, F_VIA].set(-1)
-        if not cfg.opportunistic:
-            sp = _anchor_tia(sp, pe_ids)
+        sp = maybe_anchor(sp)
         pos2 = (pend_h + pend_n) % PEND_CAP
         pend = jax.vmap(
             lambda q, i, v, m: q.at[i].set(jnp.where(m, v, q[i]))
@@ -648,7 +779,8 @@ def _make_cycle(cfg: MachineConfig):
             st.amq, jnp.clip(st.amq_head, 0, st.amq.shape[1] - 1)
             [:, None, None].repeat(MSG_F, 2), 1)[:, 0, :]
         inj_msg = jnp.where(inj_dyn[:, None], dyn_msg, stat_msg)
-        if cfg.valiant:
+
+        def inj_valiant():
             # TIA-Valiant: ROMM-style randomized *minimal-path* routing
             # (paper cites [33, 48]) — the waypoint is drawn inside the
             # src→dst bounding box, so each leg keeps the same per-axis
@@ -673,8 +805,10 @@ def _make_cycle(cfg: MachineConfig):
             eligible = (inj_msg[:, F_VIA] == -1) & \
                 (inj_msg[:, F_DST0] != pe_ids) & (via_pe != pe_ids) & \
                 (via_pe != inj_msg[:, F_DST0])
-            inj_msg = inj_msg.at[:, F_VIA].set(
+            return inj_msg.at[:, F_VIA].set(
                 jnp.where(eligible, via_pe, inj_msg[:, F_VIA]))
+
+        inj_msg = pick_mode(val_on, inj_valiant, lambda: inj_msg)
         do_inj = inj_dyn | inj_stat
         net_inj = do_inj
         posi = jnp.clip(buf_n[:, P_INJ], 0, DEPTH - 1)
@@ -739,10 +873,24 @@ class RunResult:
 # ----------------------------------------------------------------------------
 # Compiled engines keyed by the static ``MachineConfig`` (plus the chunk
 # length and the module-level FIFO constants, which are baked into the
-# trace).  Repeated sweep points with the same fabric configuration reuse
-# both the Python-level engine and — because the program is a traced
-# argument — the underlying XLA executable.
+# trace).  With traced modes (the default) the three mode flags are
+# *stripped from the key*: the execution mode is runtime data, so every
+# (workload x mode) sweep point on one fabric geometry reuses both the
+# Python-level engine and — because the program and mode are traced
+# arguments — the single underlying XLA executable.
 _ENGINE_CACHE: dict = {}
+
+
+def _engine_key_cfg(cfg: MachineConfig) -> MachineConfig:
+    """Canonicalize a config for engine-cache lookup.
+
+    Traced-mode engines do not specialize on the mode flags, so configs
+    differing only in mode collapse onto one cache entry (and one XLA
+    executable).  Static-mode engines keep the full config."""
+    if not cfg.traced_modes:
+        return cfg
+    return dataclasses.replace(cfg, opportunistic=True, dual_issue=True,
+                               valiant=False)
 
 
 def clear_engine_cache() -> None:
@@ -776,22 +924,24 @@ def engine_cache_size() -> int:
 
 
 def _get_engine(cfg: MachineConfig, chunk: int):
-    """Batched runner ``engine(prog, st) -> (st, overflowed, idle)``.
+    """Batched runner ``engine(prog, modes, st) -> (st, overflowed, idle)``.
 
-    ``prog`` is (B, P, CFG_F) and ``st`` a MachineState whose leaves carry a
-    leading batch dimension.  The whole run happens in ONE device call: a
-    ``lax.while_loop`` over jitted chunks of ``chunk`` cycles, terminating
-    when every lane is idle (or capped, or a lane trips the pending-FIFO
-    guard).  A lane that reaches idle freezes — its cycle counter and stats
-    stop advancing — so per-lane metrics match a solo :func:`run` exactly.
+    ``prog`` is (B, P, CFG_F), ``modes`` a (B,) int32 per-lane mode bitmask
+    (ignored by static-mode engines) and ``st`` a MachineState whose leaves
+    carry a leading batch dimension.  The whole run happens in ONE device
+    call: a ``lax.while_loop`` over jitted chunks of ``chunk`` cycles,
+    terminating when every lane is idle (or capped, or a lane trips the
+    pending-FIFO guard).  A lane that reaches idle freezes — its cycle
+    counter and stats stop advancing — so per-lane metrics match a solo
+    :func:`run` exactly.
     """
-    key = (cfg, chunk, PEND_CAP, STREAM_THROTTLE)
+    key = (_engine_key_cfg(cfg), chunk, PEND_CAP, STREAM_THROTTLE)
     eng = _ENGINE_CACHE.get(key)
     if eng is not None:
         return eng
     cyc = _make_cycle(cfg)
 
-    def lane_step(prog, st):
+    def lane_step(prog, mode, st):
         # Step unconditionally — on an idle lane the transition is a natural
         # no-op for every state array (idle is absorbing: nothing buffered,
         # queued, streaming, or left to inject) — and freeze only the cycle
@@ -800,7 +950,7 @@ def _get_engine(cfg: MachineConfig, chunk: int):
         # multi-MB queue arrays each cycle; masking the cheap observable
         # leaves keeps per-cycle cost independent of queue capacities.
         active = (~is_idle(st)) & (st.cycle < cfg.max_cycles)
-        st2 = cyc(prog, st)
+        st2 = cyc(prog, mode, st)
 
         def keep(new, old):
             return jnp.where(active, new, old)
@@ -815,10 +965,10 @@ def _get_engine(cfg: MachineConfig, chunk: int):
             st_inj=keep(st2.st_inj, st.st_inj),
         )
 
-    step = jax.vmap(lane_step)
+    step = jax.vmap(lane_step, in_axes=(0, 0, 0))
 
-    @functools.partial(jax.jit, donate_argnums=1)
-    def engine(prog, st):
+    @functools.partial(jax.jit, donate_argnums=2)
+    def engine(prog, modes, st):
         def cond(carry):
             s, over = carry
             live = ~jax.vmap(is_idle)(s) & (s.cycle < cfg.max_cycles)
@@ -827,7 +977,7 @@ def _get_engine(cfg: MachineConfig, chunk: int):
         def body(carry):
             s, over = carry
             def sub(s, _):
-                return step(prog, s), ()
+                return step(prog, modes, s), ()
             s, _ = jax.lax.scan(sub, s, None, length=chunk)
             # pending-FIFO high-water check at chunk granularity (the
             # consumption-guarantee invariant, see PEND_CAP above).  Lanes
@@ -870,7 +1020,7 @@ def _lane_result(cfg: MachineConfig, st: MachineState, done: bool,
     )
 
 
-def run_many(cfg: MachineConfig, workloads, *,
+def run_many(cfg: MachineConfig, workloads, *, modes=None,
              chunk: int = 512) -> list[RunResult]:
     """Simulate B workloads on one fabric configuration in a single batched
     on-device run.
@@ -883,6 +1033,12 @@ def run_many(cfg: MachineConfig, workloads, *,
         of compiled workloads (anything with ``prog`` / ``static_ams`` /
         ``amq_len`` / ``mem_val`` / ``mem_meta``, e.g.
         :class:`repro.core.compiler.CompiledWorkload`) to stack and pad.
+      modes: optional per-lane fabric modes — a sequence of
+        :data:`FABRIC_MODES` names and/or mode bitmasks, one per lane.
+        Defaults to the batch's own ``modes`` (if stacked with some), else
+        every lane runs the mode described by ``cfg``'s flags.  Mixing
+        modes in one batch requires ``cfg.traced_modes`` (the default);
+        the whole grid then shares one compiled engine.
 
     Returns:
       One :class:`RunResult` per lane, in input order — metrics are exactly
@@ -904,13 +1060,28 @@ def run_many(cfg: MachineConfig, workloads, *,
     if workloads.mem_words > cfg.mem_words:
         cfg = dataclasses.replace(cfg, mem_words=workloads.mem_words)
 
+    if modes is None:
+        modes = workloads.modes
+    if modes is None:
+        lane_modes = np.full((workloads.batch,), mode_code(cfg), np.int32)
+    else:
+        lane_modes = np.asarray([resolve_mode(m) for m in modes], np.int32)
+        if lane_modes.shape[0] != workloads.batch:
+            raise ValueError(f"{lane_modes.shape[0]} modes for "
+                             f"{workloads.batch} lanes")
+    if not cfg.traced_modes and (lane_modes != mode_code(cfg)).any():
+        raise ValueError("per-lane modes differing from the config flags "
+                         "require cfg.traced_modes=True (static engines "
+                         "bake the mode into the trace)")
+
     st = jax.vmap(functools.partial(init_state, cfg))(
         jnp.asarray(workloads.static_ams, jnp.int32),
         jnp.asarray(workloads.amq_len, jnp.int32),
         jnp.asarray(workloads.mem_val, jnp.int32),
         jnp.asarray(workloads.mem_meta, jnp.int32))
     engine = _get_engine(cfg, chunk)
-    st, over, idle = engine(jnp.asarray(workloads.prog, jnp.int32), st)
+    st, over, idle = engine(jnp.asarray(workloads.prog, jnp.int32),
+                            jnp.asarray(lane_modes, jnp.int32), st)
     over = np.asarray(over)
     if over.any():
         raise RuntimeError("pending-FIFO overflow: consumption guarantee "

@@ -79,6 +79,12 @@ def nnz_balanced_rows(rowptr: np.ndarray, n_parts: int) -> Placement:
     m = rowptr.shape[0] - 1
     nnz = np.diff(rowptr)
     total = int(rowptr[-1])
+    if total == 0:
+        # All-zero matrix: every searchsorted boundary collapses to 0 and
+        # the last PE would inherit EVERY row.  Fall back to contiguous
+        # equal-rows splitting (the only balance signal left).
+        row_to_pe = (np.arange(m) * n_parts // max(1, m)).astype(np.int32)
+        return _placement_from_assignment(row_to_pe, nnz, n_parts)
     # Target cumulative boundaries at i*total/N; np.searchsorted on the
     # cumulative nnz gives the O(m) linear-scan equivalent.
     cum = rowptr[1:]  # cumulative nnz *after* each row

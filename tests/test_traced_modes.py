@@ -1,0 +1,147 @@
+"""Golden mode-equivalence suite for the traced fabric-mode engine.
+
+The execution mode (Nexus / TIA / TIA-Valiant) is per-lane runtime data to
+the compiled engine (machine.FABRIC_MODES).  These tests pin the PR-1
+equivalence discipline:
+
+  * for every mode x {SpMV, BFS, SDDMM}, the traced engine's RunResult is
+    bit-identical to the static engine (``traced_modes=False``, mode baked
+    into the trace — the pre-traced golden path);
+  * a mixed-mode ``run_many`` batch matches the per-mode solo runs;
+  * the full (workload x mode) grid compiles exactly ONE engine.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import compiler, machine
+from repro.core.machine import FABRIC_MODES, MachineConfig
+
+RNG = np.random.default_rng(101)
+
+
+def _cfg(**kw):
+    kw.setdefault("mem_words", 1024)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def wls():
+    from benchmarks.workloads import small_world_graph
+    cfg = _cfg()
+    a = compiler.random_sparse(16, 16, 0.3, RNG)
+    x = RNG.integers(-4, 5, size=(16,))
+    ad = RNG.integers(-3, 4, size=(10, 8))
+    bd = RNG.integers(-3, 4, size=(8, 10))
+    mask = (RNG.random((10, 10)) < 0.3).astype(np.int64)
+    rp, col = small_world_graph(24, 4, 3)
+    return cfg, {
+        "spmv": compiler.build_spmv(a, x, cfg),
+        "bfs": compiler.build_bfs(rp, col, 0, cfg),
+        "sddmm": compiler.build_sddmm(ad, bd, mask, cfg),
+    }
+
+
+def _sig(r):
+    """Every per-lane metric of a RunResult, hashable for == comparison."""
+    return (r.cycles, r.executed, r.enroute, r.hops, r.injected,
+            r.completed, r.utilization, r.busy_frac, r.enroute_frac,
+            tuple(np.asarray(r.per_pe_busy).tolist()),
+            tuple(np.asarray(r.stall_per_port).ravel().tolist()))
+
+
+def _solo(cfg, wl):
+    return machine.run(cfg, wl.prog, wl.static_ams, wl.amq_len, wl.mem_val,
+                       wl.mem_meta)
+
+
+def test_traced_matches_static_fast_spot_check(wls):
+    """Fast-tier pin of the static==traced claim: TIA exercises every
+    masked path that differs from the trace default (single-issue select,
+    anchoring, no interception), so one static compile guards the golden
+    property on every push; the full grid runs in the slow tier."""
+    cfg, by_name = wls
+    wl = by_name["spmv"]
+    static_cfg = dataclasses.replace(cfg, traced_modes=False,
+                                     **machine.mode_flags("tia"))
+    traced_cfg = dataclasses.replace(cfg, **machine.mode_flags("tia"))
+    s, t = _solo(static_cfg, wl), _solo(traced_cfg, wl)
+    assert _sig(s) == _sig(t)
+    np.testing.assert_array_equal(s.mem_val, t.mem_val)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", list(FABRIC_MODES))
+def test_traced_engine_matches_static_golden(mode, wls):
+    """Traced-mode engine == static (mode-baked) engine, bit for bit."""
+    cfg, by_name = wls
+    static_cfg = dataclasses.replace(cfg, traced_modes=False,
+                                     **machine.mode_flags(mode))
+    traced_cfg = dataclasses.replace(cfg, **machine.mode_flags(mode))
+    for name, wl in by_name.items():
+        s = _solo(static_cfg, wl)
+        t = _solo(traced_cfg, wl)
+        assert _sig(s) == _sig(t), (mode, name)
+        np.testing.assert_array_equal(s.mem_val, t.mem_val,
+                                      err_msg=f"{mode}/{name}")
+        assert wl.check(t.mem_val), (mode, name)
+
+
+def test_mixed_mode_batch_matches_solo_runs(wls):
+    """One batch carrying all three modes == three solo runs."""
+    cfg, by_name = wls
+    wl = by_name["spmv"]
+    modes = list(FABRIC_MODES)
+    batched = machine.run_many(cfg, [wl] * len(modes), modes=modes)
+    for mode, b in zip(modes, batched):
+        s = _solo(dataclasses.replace(cfg, **machine.mode_flags(mode)), wl)
+        assert _sig(b) == _sig(s), mode
+    # sanity: the mode axis actually did something per lane
+    by_mode = dict(zip(modes, batched))
+    assert by_mode["nexus"].enroute > 0
+    assert by_mode["tia"].enroute == 0
+    assert by_mode["tia_valiant"].enroute == 0
+    # (no hop assertion: Valiant waypoints stay inside the src->dst
+    # bounding box, so its detours are still minimal-path)
+
+
+def test_engine_cache_one_for_full_grid(wls):
+    """The whole (3 workloads x 3 modes) grid shares ONE compiled engine,
+    and per-mode solo runs land on that same engine."""
+    cfg, by_name = wls
+    machine.clear_engine_cache()
+    lanes, modes = [], []
+    for mode in FABRIC_MODES:
+        for wl in by_name.values():
+            lanes.append(wl)
+            modes.append(mode)
+    results = machine.run_many(cfg, lanes, modes=modes)
+    assert machine.engine_cache_size() == 1
+    assert all(r.completed for r in results)
+    for mode in FABRIC_MODES:
+        _solo(dataclasses.replace(cfg, **machine.mode_flags(mode)),
+              by_name["spmv"])
+    assert machine.engine_cache_size() == 1
+
+
+def test_modes_carried_on_stacked_batch(wls):
+    """stack_workloads(modes=...) rides the mode vector into run_many."""
+    from repro.core import batch
+    cfg, by_name = wls
+    wl = by_name["spmv"]
+    stacked = batch.stack_workloads([wl, wl], modes=["nexus", "tia"])
+    np.testing.assert_array_equal(
+        stacked.modes, [machine.MODE_NEXUS, machine.MODE_TIA])
+    r_nx, r_tia = machine.run_many(cfg, stacked)
+    assert r_nx.enroute > 0 and r_tia.enroute == 0
+
+
+def test_static_engines_reject_mixed_modes(wls):
+    cfg, by_name = wls
+    scfg = dataclasses.replace(cfg, traced_modes=False)
+    with pytest.raises(ValueError, match="traced_modes"):
+        machine.run_many(scfg, [by_name["spmv"]] * 2, modes=["nexus", "tia"])
+    with pytest.raises(ValueError, match="unknown fabric mode"):
+        machine.resolve_mode("not-a-mode")
