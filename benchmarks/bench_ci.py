@@ -1,0 +1,196 @@
+"""CI benchmark-trajectory artifacts + perf-regression gate.
+
+Run by the ``bench`` job on every push to main (see
+.github/workflows/ci.yml).  Produces two JSON artifacts so the perf
+trajectory of the repo accumulates run over run:
+
+  * ``BENCH_fig11.json`` — the deterministic smoke grid (3 workloads x 3
+    fabric modes on a 2x2 mesh through ``harness.run_grid``): per-lane
+    cycles / utilization / executed, grid wall-clock, engine-cache size.
+  * ``BENCH_fig17.json`` — the batched Fig. 17 scaling sweep (3 workloads
+    x 2x2/4x4/8x8 meshes as ONE ``run_many`` call): per-point cycles /
+    utilization, sweep wall-clock, engine-cache size.
+
+Perf-regression gates (exit 1 on violation):
+
+  * the smoke grid's per-lane cycle counts must equal the checked-in
+    golden values (benchmarks/golden/bench_smoke.json) — the simulator is
+    a deterministic integer machine, so ANY drift is a semantic change
+    that must be acknowledged by re-running with ``--update-golden``;
+  * ``machine.engine_cache_size()`` must be exactly 1 after each full
+    grid — more means a lane silently recompiled (the mode/geometry axes
+    stopped being runtime data).
+
+    PYTHONPATH=src python -m benchmarks.bench_ci --out experiments/ci
+    PYTHONPATH=src python -m benchmarks.bench_ci --update-golden
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+import numpy as np
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "bench_smoke.json")
+
+
+def _meta() -> dict:
+    import jax
+    return dict(python=platform.python_version(), jax=jax.__version__,
+                backend=jax.default_backend())
+
+
+def smoke_workloads():
+    """The deterministic smoke grid inputs (fixed seeds: the golden gate
+    depends on these being bit-stable)."""
+    from benchmarks.workloads import Workload, small_world_graph
+    from repro.core import compiler
+    rng = np.random.default_rng(5)
+    a = compiler.random_sparse(8, 8, 0.4, rng)
+    x = rng.integers(-3, 4, size=(8,))
+    da = rng.integers(-3, 4, size=(4, 4))
+    db = rng.integers(-3, 4, size=(4, 4))
+    rp, col = small_world_graph(12, 4, 2)
+    return [
+        Workload(name="spmv", sparsity_note="sparse",
+                 build=lambda c, s: compiler.build_spmv(a, x, c, strategy=s),
+                 useful_ops=2 * int(np.count_nonzero(a)),
+                 cgra=None, systolic_cycles=None, mem_words=1024),
+        Workload(name="matmul", sparsity_note="dense",
+                 build=lambda c, s: compiler.build_matmul(da, db, c,
+                                                          strategy=s),
+                 useful_ops=2 * 4 ** 3,
+                 cgra=None, systolic_cycles=None, mem_words=1024),
+        Workload(name="bfs", sparsity_note="graph",
+                 build=lambda c, s: compiler.build_bfs(rp, col, 0, c,
+                                                       strategy=s),
+                 useful_ops=2 * int(col.size),
+                 cgra=None, systolic_cycles=None, mem_words=1024),
+    ]
+
+
+def run_smoke() -> dict:
+    """The tiny harness grid: one engine, one device call, deterministic
+    cycle counts."""
+    from benchmarks import harness
+    from repro.core import machine
+    from repro.core.machine import MachineConfig
+    wls = smoke_workloads()
+    machine.clear_engine_cache()
+    t0 = time.time()
+    grid = harness.run_grid(wls, base_cfg=MachineConfig(width=2, height=2),
+                            max_cycles=100_000)
+    wall = time.time() - t0
+    table = {
+        wl.name: {
+            mode: dict(cycles=rows[i]["cycles"],
+                       utilization=rows[i]["utilization"],
+                       executed=rows[i]["executed"])
+            for mode, rows in grid.items()
+        }
+        for i, wl in enumerate(wls)
+    }
+    return dict(meta=_meta(), wall_s=round(wall, 3),
+                engine_cache_size=machine.engine_cache_size(), grid=table)
+
+
+def run_fig17() -> dict:
+    """The batched Fig. 17 sweep: the whole sizes x workloads grid as ONE
+    run_many call on one compiled engine."""
+    from benchmarks import fig17_scaling
+    from repro.core import machine
+    machine.clear_engine_cache()
+    t0 = time.time()
+    data = fig17_scaling.run_grid(fig17_scaling._builders())
+    wall = time.time() - t0
+    return dict(meta=_meta(), wall_s=round(wall, 3),
+                engine_cache_size=machine.engine_cache_size(), grid=data)
+
+
+def check_golden(smoke: dict, update: bool) -> list[str]:
+    """Compare smoke-grid cycles against the checked-in golden values."""
+    got = {name: {mode: row["cycles"] for mode, row in modes.items()}
+           for name, modes in smoke["grid"].items()}
+    if update:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+        print(f"golden updated: {GOLDEN}")
+        return []
+    if not os.path.exists(GOLDEN):
+        return [f"golden file missing: {GOLDEN} (run --update-golden)"]
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    errors = []
+    for name, modes in want.items():
+        for mode, cycles in modes.items():
+            have = got.get(name, {}).get(mode)
+            if have != cycles:
+                errors.append(f"cycle drift: {name}/{mode} golden={cycles} "
+                              f"got={have}")
+    for name, modes in got.items():
+        for mode in modes:
+            if mode not in want.get(name, {}):
+                errors.append(f"untracked grid point: {name}/{mode} "
+                              "(run --update-golden)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join("experiments", "ci"),
+                    help="artifact output directory")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="rewrite benchmarks/golden/bench_smoke.json from "
+                         "this run instead of gating on it")
+    ap.add_argument("--skip-fig17", action="store_true",
+                    help="smoke grid + golden gate only (quick)")
+    args = ap.parse_args()
+
+    from repro.core import machine
+    cache_dir = os.environ.get("NEXUS_XLA_CACHE")
+    machine.enable_persistent_compile_cache(
+        os.path.expanduser(cache_dir) if cache_dir else None)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures: list[str] = []
+
+    smoke = run_smoke()
+    with open(os.path.join(args.out, "BENCH_fig11.json"), "w") as f:
+        json.dump(smoke, f, indent=1)
+    print(f"smoke grid: wall={smoke['wall_s']}s "
+          f"engines={smoke['engine_cache_size']}")
+    if smoke["engine_cache_size"] != 1:
+        failures.append("smoke grid compiled "
+                        f"{smoke['engine_cache_size']} engines (want 1): "
+                        "a lane axis stopped being runtime data")
+    failures += check_golden(smoke, args.update_golden)
+
+    if not args.skip_fig17:
+        fig17 = run_fig17()
+        with open(os.path.join(args.out, "BENCH_fig17.json"), "w") as f:
+            json.dump(fig17, f, indent=1)
+        print(f"fig17 sweep: wall={fig17['wall_s']}s "
+              f"engines={fig17['engine_cache_size']}")
+        if fig17["engine_cache_size"] != 1:
+            failures.append("fig17 size grid compiled "
+                            f"{fig17['engine_cache_size']} engines "
+                            "(want 1): geometry stopped being runtime "
+                            "data")
+
+    if failures:
+        print("\nPERF-REGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("bench artifacts written; perf gates green")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

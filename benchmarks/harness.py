@@ -2,10 +2,12 @@
 cache the raw numbers; the per-figure scripts format slices of this table.
 
 The whole paper-figure grid — workload axis x fabric-mode axis (Nexus /
-TIA / TIA-Valiant) — is stacked into the lanes of ONE ``machine.run_many``
-call: the execution mode is per-lane runtime data to the compiled engine
-(see ``repro.core.machine.FABRIC_MODES``), so the full Figs. 11-14 suite
-costs one engine compile and one device call.
+TIA / TIA-Valiant) x, optionally, mesh-size axis (2x2 ... 8x8) — is
+stacked into the lanes of ONE ``machine.run_many`` call: the execution
+mode AND the mesh geometry are per-lane runtime data to the compiled
+engine (see ``repro.core.machine.FABRIC_MODES`` / ``traced_geometry``),
+so the full Figs. 11-14 suite — and the Fig. 17 scaling sweep via
+``run_grid(sizes=...)`` — costs one engine compile and one device call.
 
 Results land in experiments/bench/results.json.
 """
@@ -64,46 +66,65 @@ def _result_row(res, batch_wall: float) -> dict:
 
 def run_grid(wls: list[Workload], modes=None, *,
              base_cfg: MachineConfig | None = None,
-             max_cycles: int = 400_000) -> dict[str, list[dict]]:
-    """Run the full (workload x fabric-mode) grid in ONE batched device
-    call.
+             max_cycles: int = 400_000, sizes=None) -> dict:
+    """Run the full (workload x fabric-mode [x mesh-size]) grid in ONE
+    batched device call.
 
-    Lanes are stacked mode-major (all workloads on ``modes[0]``, then all
-    on ``modes[1]``, ...) with the per-lane mode vector threaded through
-    ``machine.run_many`` — one compiled engine serves every grid point.
-    ``modes`` entries may be ``FABRIC_MODES`` names or raw mode bitmasks
-    (ablation lanes).  Returns ``{mode: [result-row per workload, in
-    input order]}`` keyed by the modes as given.
+    Lanes are stacked mode-major, then size-major (all workloads on
+    ``modes[0]`` at ``sizes[0]``, then at ``sizes[1]``, ...) with the
+    per-lane mode vector — and, via each compiled lane's recorded
+    geometry, the per-lane ``(width, height)`` vector — threaded through
+    ``machine.run_many``: one compiled engine serves every grid point,
+    whatever its mode or mesh.  ``modes`` entries may be ``FABRIC_MODES``
+    names or raw mode bitmasks (ablation lanes); ``sizes`` entries are
+    ``(width, height)`` pairs (placement is recomputed per size).
+
+    Returns ``{mode: [result-row per workload, in input order]}`` when
+    ``sizes`` is None (the classic Figs. 11-14 grid on ``base_cfg``'s
+    mesh), else ``{mode: {"WxH": [rows]}}``.
     """
     modes = list(FABRIC_MODES) if modes is None else list(modes)
     base_cfg = base_cfg or MachineConfig()
+    size_list = [None] if sizes is None else [tuple(s) for s in sizes]
     built, lane_modes = [], []
     lane_cache: dict = {}   # modes sharing a placement reuse built lanes
     for mode in modes:
         placement = _placement_for(mode)
-        for i, wl in enumerate(wls):
-            if (i, placement) not in lane_cache:
-                cfg = dataclasses.replace(base_cfg, mem_words=wl.mem_words,
-                                          max_cycles=max_cycles)
-                lane_cache[i, placement] = wl.build(cfg, placement)
-            built.append(lane_cache[i, placement])
-            lane_modes.append(mode)
+        for size in size_list:
+            for i, wl in enumerate(wls):
+                key = (i, placement, size)
+                if key not in lane_cache:
+                    cfg = dataclasses.replace(
+                        base_cfg, mem_words=wl.mem_words,
+                        max_cycles=max_cycles)
+                    if size is not None:
+                        cfg = dataclasses.replace(cfg, width=size[0],
+                                                  height=size[1])
+                    lane_cache[key] = wl.build(cfg, placement)
+                built.append(lane_cache[key])
+                lane_modes.append(mode)
     run_cfg = dataclasses.replace(
         base_cfg, mem_words=max(wl.mem_words for wl in wls),
         max_cycles=max_cycles)
     t0 = time.time()
     results = machine.run_many(run_cfg, built, modes=lane_modes)
     wall = time.time() - t0
-    out: dict[str, list[dict]] = {}
+    out: dict = {}
     lanes = iter(zip(built, results))
     for mode in modes:
-        rows = []
-        for wl in wls:
-            b, res = next(lanes)
-            assert res.completed, f"{wl.name} on {mode}: no global idle"
-            assert b.check(res.mem_val), f"{wl.name} on {mode}: WRONG RESULT"
-            rows.append(_result_row(res, wall))
-        out[mode] = rows
+        by_size: dict = {}
+        for size in size_list:
+            rows = []
+            for wl in wls:
+                b, res = next(lanes)
+                at = "" if size is None else f" @ {size[0]}x{size[1]}"
+                assert res.completed, f"{wl.name} on {mode}{at}: no idle"
+                assert b.check(res.mem_val), \
+                    f"{wl.name} on {mode}{at}: WRONG RESULT"
+                rows.append(_result_row(res, wall))
+            by_size[size] = rows
+        out[mode] = (by_size[None] if sizes is None else
+                     {f"{w}x{h}": by_size[w, h] for (w, h) in size_list})
     return out
 
 

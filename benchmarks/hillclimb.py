@@ -1,5 +1,6 @@
 """Perf hillclimbing (deliverable g §Perf): hypothesis → change → re-lower →
-validate, on the three chosen cells.
+validate, on the three chosen cells — plus fabric-size autotuning on the
+cycle-level simulator.
 
 Each variant is a (policy, microbatch, flags) override on top of the
 baseline TRAIN_POLICY; every run re-lowers + compiles on the production
@@ -9,6 +10,14 @@ before/after per variant.
 
     PYTHONPATH=src python -m benchmarks.hillclimb --cell minitron_4b:train_4k \
         --variant baseline --variant remat_none ...
+
+Fabric-size autotuning (``--fabric``): every candidate mesh geometry is a
+lane of ONE batched ``machine.run_many`` call (the geometry is traced, so
+the whole candidate set shares one compiled engine and one device call —
+what used to be a compile per size, cheap enough for CI):
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --fabric spmv \
+        --sizes 2x2,2x4,4x4,4x8,8x8
 """
 from __future__ import annotations
 
@@ -21,6 +30,8 @@ from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+FABRIC_SIZES = [(2, 2), (2, 4), (4, 4), (4, 8), (8, 8)]
 
 # variant name -> dict(policy=(remat, seqshard, microbatch), arch=<cfg
 # dataclass overrides>)
@@ -72,12 +83,73 @@ def fmt(rec):
             f"roofline={100*t.mfu_bound:5.1f}%")
 
 
+def fabric_autotune(workload: str = "spmv", sizes=None, *,
+                    builders=None, save: bool = True) -> dict:
+    """Pick the best mesh geometry for a workload by running EVERY
+    candidate as a lane of one batched device call.
+
+    Scores both ends of the trade: latency (cycles) and efficiency
+    (cycles x PEs — the area-delay proxy).  Returns the scored table with
+    the argmin of each; with ``save`` the record lands in
+    experiments/perf/fabric__<workload>.json.
+    """
+    from repro.core import machine
+    if builders is None:
+        from benchmarks.fig17_scaling import _builders
+        builders = _builders()
+    if workload not in builders:
+        raise ValueError(f"unknown fabric workload {workload!r}; "
+                         f"known: {sorted(builders)}")
+    sizes = FABRIC_SIZES if sizes is None else list(sizes)
+    from benchmarks.fig17_scaling import _size_cfg
+    lanes = [builders[workload](_size_cfg(w, h)) for (w, h) in sizes]
+    results = machine.run_many(_size_cfg(*sizes[0]), lanes)
+    table = {}
+    for (w, h), wl, r in zip(sizes, lanes, results):
+        assert r.completed and wl.check(r.mem_val), f"{workload} @ {w}x{h}"
+        table[f"{w}x{h}"] = dict(
+            cycles=r.cycles, pes=w * h, cycle_pes=r.cycles * w * h,
+            utilization=r.utilization)
+    best_lat = min(table, key=lambda k: table[k]["cycles"])
+    best_eff = min(table, key=lambda k: table[k]["cycle_pes"])
+    rec = dict(workload=workload, table=table, best_latency=best_lat,
+               best_efficiency=best_eff,
+               engine_cache_size=machine.engine_cache_size())
+    if save:
+        os.makedirs(OUT, exist_ok=True)
+        with open(os.path.join(OUT, f"fabric__{workload}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def _parse_sizes(spec: str):
+    return [tuple(int(t) for t in s.split("x")) for s in spec.split(",")]
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--cell", default=None, help="arch:shape")
     ap.add_argument("--variant", action="append", default=None)
     ap.add_argument("--no-pair", action="store_true")
+    ap.add_argument("--fabric", default=None, metavar="WORKLOAD",
+                    help="autotune the simulator mesh size for WORKLOAD "
+                         "(one batched run over --sizes)")
+    ap.add_argument("--sizes", default=None,
+                    help="candidate geometries, e.g. 2x2,4x4,8x8")
     args = ap.parse_args()
+    if args.fabric:
+        sizes = _parse_sizes(args.sizes) if args.sizes else None
+        rec = fabric_autotune(args.fabric, sizes)
+        for sz, row in rec["table"].items():
+            print(f"{args.fabric} @ {sz:<5} cycles={row['cycles']:>8} "
+                  f"cycle*PEs={row['cycle_pes']:>9} "
+                  f"util={row['utilization']:.2f}")
+        print(f"best latency: {rec['best_latency']}   "
+              f"best efficiency: {rec['best_efficiency']}   "
+              f"(engines compiled: {rec['engine_cache_size']})")
+        return
+    if not args.cell:
+        raise SystemExit("need --cell arch:shape (or --fabric WORKLOAD)")
     arch, shape = args.cell.split(":")
     variants = args.variant or ["baseline"]
     for v in variants:

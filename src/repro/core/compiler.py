@@ -78,6 +78,11 @@ class CompiledWorkload:
     expected: np.ndarray              # numpy oracle
     n_static_ams: int
     name: str = ""
+    # The (width, height) mesh the data placement targeted.  PE ids are
+    # row-major coordinates on THIS mesh, so a lane's geometry travels with
+    # the workload into mixed-size run_many batches (see
+    # repro.core.batch.stack_workloads).
+    geom: tuple[int, int] | None = None
 
     def check(self, mem_val: np.ndarray) -> bool:
         return bool(np.array_equal(self.read_result(mem_val), self.expected))
@@ -127,7 +132,8 @@ class _Builder:
         return CompiledWorkload(
             prog=prog, static_ams=sams, amq_len=alen, mem_val=self.mem_val,
             mem_meta=self.mem_meta, read_result=read_result,
-            expected=expected, n_static_ams=total, name=name)
+            expected=expected, n_static_ams=total, name=name,
+            geom=(self.cfg.width, self.cfg.height))
 
 
 def _place_rows(rowptr, col, n_pes, strategy, n_cols):

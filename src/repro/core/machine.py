@@ -45,14 +45,30 @@ are equally valid lanes.  One compiled engine therefore serves the whole
 (workload x mode) grid: :func:`run_many` accepts per-lane ``modes`` and
 the engine-cache key ignores the mode flags entirely.
 
-What stays *static* (compile-time) in :class:`MachineConfig`: the fabric
-geometry (``width``/``height``), memory and queue capacities
+Fabric geometry as runtime data (the per-lane size axis)
+---------------------------------------------------------
+The paper's scaling result (Fig. 17: 2x2 -> 8x8 PE arrays) sweeps the mesh
+*geometry*, so — like the mode — the per-lane ``(width, height)`` pair is a
+*traced* ``(2,)`` int32 vector of the compiled engine (default
+``traced_geometry=True``).  Every ``MachineState`` PE axis is padded to a
+batch-wide ``N_max``; routing, neighbor indices and the PE coordinate maps
+are computed from the traced geometry instead of the static
+``cfg.neighbor_maps()`` table, and PEs at index >= width*height are
+*inactive*: they hold all-zero state, are masked out of injection,
+execution selection and the idle test, and are sliced out of per-lane
+results — so a padded lane is bit-identical to its solo run on the native
+mesh.  One compiled engine (keyed on ``N_max``, not on width/height)
+therefore serves every (workload x mode x size) sweep point.
+
+What stays *static* (compile-time) in :class:`MachineConfig`: the padded
+PE-axis length, memory and queue capacities
 (``mem_words``/``queue_cap``/``stream_wait_cap``), and ``max_cycles`` —
 anything that changes array shapes or trip counts.  The three mode flags
-remain on :class:`MachineConfig` as the *default* mode for lanes that do
-not specify one, and — with ``traced_modes=False`` — as a fallback that
-bakes the mode into the trace exactly like the pre-traced-mode engines
-(kept for golden equivalence testing; one compile per mode).
+and ``width``/``height`` remain on :class:`MachineConfig` as the *default*
+mode / geometry for lanes that do not specify one, and — with
+``traced_modes=False`` / ``traced_geometry=False`` — as fallbacks that
+bake them into the trace exactly like the pre-traced engines (kept for
+golden equivalence testing; one compile per mode / mesh size).
 """
 from __future__ import annotations
 
@@ -167,6 +183,13 @@ class MachineConfig:
     # traced_modes=False bakes them into the trace as Python branches — the
     # pre-traced static engines, kept as the golden reference path.
     traced_modes: bool = True
+    # Likewise width/height: with traced_geometry=True (default) they only
+    # name the default lane geometry — the engine computes routing from a
+    # traced per-lane (width, height) vector over a padded PE axis, and the
+    # cache key keeps the padded length but not the mesh shape.  Setting
+    # traced_geometry=False bakes the mesh into the trace (one compile per
+    # fabric size — the pre-traced golden path).
+    traced_geometry: bool = True
 
     @property
     def n_pes(self) -> int:
@@ -233,8 +256,12 @@ def init_state(cfg: MachineConfig,
       static_ams: (N, QCAP, MSG_F) per-PE compiled static AMs.
       amq_len:    (N,) number of valid entries per queue.
       mem_val/mem_meta: initial data-memory images.
+
+    The PE-axis length is taken from ``static_ams`` (not ``cfg``): under
+    traced geometry the arrays arrive padded to the batch-wide ``N_max``
+    and the padded tail PEs start (and stay) all-zero.
     """
-    n = cfg.n_pes
+    n = int(static_ams.shape[0])
     z = jnp.zeros
     return MachineState(
         buf=z((n, PORTS, DEPTH, MSG_F), jnp.int32),
@@ -324,33 +351,44 @@ def _anchor_tia(nxt: jnp.ndarray, pe_ids: jnp.ndarray) -> jnp.ndarray:
 # ----------------------------------------------------------------------------
 # One clock cycle
 # ----------------------------------------------------------------------------
-def _make_cycle(cfg: MachineConfig):
-    """Build the program- and mode-parametric single-cycle transition.
+def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
+    """Build the program-, mode- and geometry-parametric cycle transition.
 
-    Returns ``cycle(prog_j, mode, st) -> st`` where ``prog_j`` is the
-    replicated configuration memory as a *traced* ``(P, CFG_F)`` array and
-    ``mode`` a *traced* int32 mode bitmask (see :data:`FABRIC_MODES`).
-    Keeping both the program and the execution mode out of the trace
-    constants means one compiled engine serves every (workload x mode)
-    point with the same shapes — the sweep compile cache in
-    :func:`run_many` relies on this.  With ``cfg.traced_modes=False`` the
-    mode argument is ignored and the config's mode flags are baked in as
-    Python branches (the golden static path).
+    Returns ``cycle(prog_j, mode, geom, st) -> st`` where ``prog_j`` is the
+    replicated configuration memory as a *traced* ``(P, CFG_F)`` array,
+    ``mode`` a *traced* int32 mode bitmask (see :data:`FABRIC_MODES`) and
+    ``geom`` a *traced* ``(2,)`` int32 ``(width, height)`` vector.  Keeping
+    the program, the execution mode and the mesh geometry out of the trace
+    constants means one compiled engine serves every (workload x mode x
+    size) point with the same shapes — the sweep compile cache in
+    :func:`run_many` relies on this.  With ``cfg.traced_modes=False`` /
+    ``cfg.traced_geometry=False`` the corresponding argument is ignored
+    and the config's flags / mesh are baked in as Python constants (the
+    golden static paths).
+
+    ``n_pes`` is the PE-axis *array length* (>= the largest lane's
+    width*height under traced geometry; must equal ``cfg.n_pes`` on the
+    static path).
     """
-    n, w = cfg.n_pes, cfg.width
-    nbr_np, opp_np = cfg.neighbor_maps()
-    nbr = jnp.asarray(nbr_np)          # (N,4)
+    n = cfg.n_pes if n_pes is None else int(n_pes)
+    if not cfg.traced_geometry:
+        assert n == cfg.n_pes, \
+            "static-geometry engines cannot pad the PE axis"
+    # A message leaving through N arrives on the neighbor's S port, etc.
+    opp_np = np.array([P_S, P_W, P_N, P_E], dtype=np.int32)
     opp = jnp.asarray(opp_np)          # (4,)
-    xs = jnp.arange(n, dtype=jnp.int32) % w
-    ys = jnp.arange(n, dtype=jnp.int32) // w
     pe_ids = jnp.arange(n, dtype=jnp.int32)
 
-    def route(dest: jnp.ndarray, credit_ok: jnp.ndarray) -> jnp.ndarray:
+    def route(dest: jnp.ndarray, credit_ok: jnp.ndarray, w, xs,
+              ys) -> jnp.ndarray:
         """West-first turn-model output port for (N,P) dest PE ids.
 
         credit_ok: (N,4) whether each directional output currently has
         downstream space — used for the *adaptive* choice between the two
         permitted minimal directions (congestion-aware, §3.3.2).
+        ``w`` / ``xs`` / ``ys`` are the mesh width and per-PE coordinates
+        (ints/arrays on the static path, traced values under traced
+        geometry).
         Returns (N,P) int32 in {0..3, OUT_LOCAL}; undefined where dest<0.
         """
         dx = dest % w - xs[:, None]
@@ -374,8 +412,34 @@ def _make_cycle(cfg: MachineConfig):
                                 jnp.where(dy != 0, ns, OUT_LOCAL))))
         return port.astype(jnp.int32)
 
-    def cycle(prog_j: jnp.ndarray, mode: jnp.ndarray,
+    def cycle(prog_j: jnp.ndarray, mode: jnp.ndarray, geom: jnp.ndarray,
               st: MachineState) -> MachineState:
+        if cfg.traced_geometry:
+            # Traced mesh: coordinates, neighbor indices and the active-PE
+            # mask are recomputed from the (width, height) vector each
+            # cycle — cheap (N,)-shaped integer work.  PEs at index >=
+            # width*height are inactive: all their neighbor entries are -1
+            # (no credit in, no transfers out) and they are masked out of
+            # injection and execution selection below.  They also hold
+            # all-zero state, so active PEs step bit-identically to a solo
+            # run on the native mesh.
+            w, gh = geom[0], geom[1]
+            xs = pe_ids % w
+            ys = pe_ids // w
+            active = pe_ids < w * gh
+            nbr = jnp.stack([
+                jnp.where(active & (ys > 0), pe_ids - w, -1),
+                jnp.where(active & (xs < w - 1), pe_ids + 1, -1),
+                jnp.where(active & (ys < gh - 1), pe_ids + w, -1),
+                jnp.where(active & (xs > 0), pe_ids - 1, -1),
+            ], axis=1)                                  # (N,4) in N/E/S/W
+        else:
+            w = cfg.width
+            xs = pe_ids % w
+            ys = pe_ids // w
+            active = None                               # every PE is real
+            nbr = jnp.asarray(cfg.neighbor_maps()[0])   # (N,4)
+
         if cfg.traced_modes:
             # Traced scalars: mode-dependent behaviour below is masked
             # dataflow, identical bit-for-bit to the static branches.
@@ -414,7 +478,7 @@ def _make_cycle(cfg: MachineConfig):
         # --- route computation --------------------------------------------
         via = heads[:, :, F_VIA]
         dest_eff = jnp.where(via >= 0, via, heads[:, :, F_DST0])
-        out_port = route(dest_eff, credit_ok)          # (N,5)
+        out_port = route(dest_eff, credit_ok, w, xs, ys)   # (N,5)
         at_dest = dest_eff == pe_ids[:, None]
         # clear a reached Valiant waypoint: routing then targets DST0.
         clear_via = head_v & (via >= 0) & at_dest
@@ -438,6 +502,11 @@ def _make_cycle(cfg: MachineConfig):
         opn_a = all_m[..., F_OP]                        # (N,5,D)
         local_a = slot_v & (all_m[..., F_DST0] == pe_ids[:, None, None]) & \
             (all_m[..., F_VIA] < 0)
+        if active is not None:
+            # inactive (padded) PEs never execute; their buffers are empty
+            # anyway, so this mask is a defensive invariant, not a bit
+            # change on active PEs.
+            local_a = local_a & active[:, None, None]
         # STREAM tasks are *always* consumable: they park in the stream-task
         # wait queue (the TIA-style scheduler queue) until the decode unit is
         # free, so they never clog the network (deadlock avoidance, §3.4).
@@ -500,6 +569,8 @@ def _make_cycle(cfg: MachineConfig):
                      & (heads[:, :, F_OP1C] == 1) & (heads[:, :, F_OP2C] == 1)
                      & (head_next_op != OP_NOP))
             icand &= (~any_alu_local)[:, None]
+            if active is not None:
+                icand &= active[:, None]
             return _pick_one(icand, st.rr + 1)
 
         sel_icept = pick_mode(opp_on, sel_opportunistic,
@@ -769,6 +840,8 @@ def _make_cycle(cfg: MachineConfig):
 
         # ==================== INJECTION (AM NIC, §3.3.1) ====================
         inj_space = buf_n[:, P_INJ] < DEPTH
+        if active is not None:
+            inj_space = inj_space & active
         have_dyn = pend_n > 0
         have_stat = st.amq_head < st.amq_len
         inj_dyn = inj_space & have_dyn
@@ -844,11 +917,24 @@ def _make_cycle(cfg: MachineConfig):
     return cycle
 
 
-def is_idle(st: MachineState) -> jnp.ndarray:
-    """Global idle detection (§3.1.4): no work anywhere, nothing in flight."""
-    return ((st.buf_n.sum() == 0) & (st.pend_n.sum() == 0)
-            & (~st.stream_on.any()) & (st.swq_n.sum() == 0)
-            & (st.amq_head >= st.amq_len).all())
+def is_idle(st: MachineState, active: jnp.ndarray | None = None
+            ) -> jnp.ndarray:
+    """Global idle detection (§3.1.4): no work anywhere, nothing in flight.
+
+    ``active`` optionally masks the PE axis (traced geometry: padded PEs
+    beyond a lane's width*height are ignored — they hold zero state by
+    invariant, so the mask is defensive, not a semantic change).
+    """
+    if active is None:
+        return ((st.buf_n.sum() == 0) & (st.pend_n.sum() == 0)
+                & (~st.stream_on.any()) & (st.swq_n.sum() == 0)
+                & (st.amq_head >= st.amq_len).all())
+    a = active
+    return (((st.buf_n * a[:, None]).sum() == 0)
+            & ((st.pend_n * a).sum() == 0)
+            & (~(st.stream_on & a).any())
+            & ((st.swq_n * a).sum() == 0)
+            & ((st.amq_head >= st.amq_len) | ~a).all())
 
 
 @dataclasses.dataclass
@@ -884,13 +970,24 @@ _ENGINE_CACHE: dict = {}
 def _engine_key_cfg(cfg: MachineConfig) -> MachineConfig:
     """Canonicalize a config for engine-cache lookup.
 
-    Traced-mode engines do not specialize on the mode flags, so configs
-    differing only in mode collapse onto one cache entry (and one XLA
-    executable).  Static-mode engines keep the full config."""
-    if not cfg.traced_modes:
-        return cfg
-    return dataclasses.replace(cfg, opportunistic=True, dual_issue=True,
-                               valiant=False)
+    Traced-mode engines do not specialize on the mode flags, and
+    traced-geometry engines do not specialize on the mesh shape (only on
+    the padded PE-axis length, carried separately in the key), so configs
+    differing only in mode and/or width x height collapse onto one cache
+    entry (and one XLA executable).  Static engines keep the full config.
+    """
+    if cfg.traced_modes:
+        cfg = dataclasses.replace(cfg, opportunistic=True, dual_issue=True,
+                                  valiant=False)
+    if cfg.traced_geometry:
+        cfg = dataclasses.replace(cfg, width=0, height=0)
+    return cfg
+
+
+def _engine_key(cfg: MachineConfig, n_max: int, chunk: int) -> tuple:
+    """The full engine-cache key (exposed for tests)."""
+    return (_engine_key_cfg(cfg), int(n_max), chunk, PEND_CAP,
+            STREAM_THROTTLE)
 
 
 def clear_engine_cache() -> None:
@@ -923,25 +1020,36 @@ def engine_cache_size() -> int:
     return len(_ENGINE_CACHE)
 
 
-def _get_engine(cfg: MachineConfig, chunk: int):
-    """Batched runner ``engine(prog, modes, st) -> (st, overflowed, idle)``.
+def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None):
+    """Batched runner ``engine(prog, modes, geoms, st) -> (st, overflowed,
+    idle)``.
 
     ``prog`` is (B, P, CFG_F), ``modes`` a (B,) int32 per-lane mode bitmask
-    (ignored by static-mode engines) and ``st`` a MachineState whose leaves
-    carry a leading batch dimension.  The whole run happens in ONE device
+    (ignored by static-mode engines), ``geoms`` a (B, 2) int32 per-lane
+    ``(width, height)`` vector (ignored by static-geometry engines) and
+    ``st`` a MachineState whose leaves carry a leading batch dimension with
+    PE axes of length ``n_max``.  The whole run happens in ONE device
     call: a ``lax.while_loop`` over jitted chunks of ``chunk`` cycles,
     terminating when every lane is idle (or capped, or a lane trips the
     pending-FIFO guard).  A lane that reaches idle freezes — its cycle
     counter and stats stop advancing — so per-lane metrics match a solo
     :func:`run` exactly.
     """
-    key = (_engine_key_cfg(cfg), chunk, PEND_CAP, STREAM_THROTTLE)
+    n_max = cfg.n_pes if n_max is None else int(n_max)
+    key = _engine_key(cfg, n_max, chunk)
     eng = _ENGINE_CACHE.get(key)
     if eng is not None:
         return eng
-    cyc = _make_cycle(cfg)
+    cyc = _make_cycle(cfg, n_max)
 
-    def lane_step(prog, mode, st):
+    def lane_active_pes(geom):
+        # (N,) bool mask of real PEs for one lane, or None when the mesh
+        # is baked into the trace (every PE is real).
+        if not cfg.traced_geometry:
+            return None
+        return jnp.arange(n_max, dtype=jnp.int32) < geom[0] * geom[1]
+
+    def lane_step(prog, mode, geom, st):
         # Step unconditionally — on an idle lane the transition is a natural
         # no-op for every state array (idle is absorbing: nothing buffered,
         # queued, streaming, or left to inject) — and freeze only the cycle
@@ -949,8 +1057,9 @@ def _get_engine(cfg: MachineConfig, chunk: int):
         # would lower to a select over EVERY leaf under vmap, copying the
         # multi-MB queue arrays each cycle; masking the cheap observable
         # leaves keeps per-cycle cost independent of queue capacities.
-        active = (~is_idle(st)) & (st.cycle < cfg.max_cycles)
-        st2 = cyc(prog, mode, st)
+        active = (~is_idle(st, lane_active_pes(geom))) & \
+            (st.cycle < cfg.max_cycles)
+        st2 = cyc(prog, mode, geom, st)
 
         def keep(new, old):
             return jnp.where(active, new, old)
@@ -965,19 +1074,20 @@ def _get_engine(cfg: MachineConfig, chunk: int):
             st_inj=keep(st2.st_inj, st.st_inj),
         )
 
-    step = jax.vmap(lane_step, in_axes=(0, 0, 0))
+    step = jax.vmap(lane_step, in_axes=(0, 0, 0, 0))
+    batch_idle = jax.vmap(lambda geom, s: is_idle(s, lane_active_pes(geom)))
 
-    @functools.partial(jax.jit, donate_argnums=2)
-    def engine(prog, modes, st):
+    @functools.partial(jax.jit, donate_argnums=3)
+    def engine(prog, modes, geoms, st):
         def cond(carry):
             s, over = carry
-            live = ~jax.vmap(is_idle)(s) & (s.cycle < cfg.max_cycles)
+            live = ~batch_idle(geoms, s) & (s.cycle < cfg.max_cycles)
             return live.any() & ~over.any()
 
         def body(carry):
             s, over = carry
             def sub(s, _):
-                return step(prog, modes, s), ()
+                return step(prog, modes, geoms, s), ()
             s, _ = jax.lax.scan(sub, s, None, length=chunk)
             # pending-FIFO high-water check at chunk granularity (the
             # consumption-guarantee invariant, see PEND_CAP above).  Lanes
@@ -991,22 +1101,28 @@ def _get_engine(cfg: MachineConfig, chunk: int):
 
         over0 = jnp.zeros(st.cycle.shape, jnp.bool_)
         st, over = jax.lax.while_loop(cond, body, (st, over0))
-        return st, over, jax.vmap(is_idle)(st)
+        return st, over, batch_idle(geoms, st)
 
     _ENGINE_CACHE[key] = engine
     return engine
 
 
 def _lane_result(cfg: MachineConfig, st: MachineState, done: bool,
-                 b: int) -> RunResult:
+                 b: int, n_lane: int | None = None) -> RunResult:
+    """Extract one lane's metrics, restricted to its *logical* mesh.
+
+    ``n_lane`` is the lane's width*height; PE-indexed arrays (busy, stall,
+    mem_val) are sliced to it so a geometry-padded lane reports exactly
+    what its solo run on the native mesh would.
+    """
     cycles = int(np.asarray(st.cycle[b]))
-    n = cfg.n_pes
-    per_pe_busy = np.asarray(st.st_busy[b])
+    n = cfg.n_pes if n_lane is None else int(n_lane)
+    per_pe_busy = np.asarray(st.st_busy[b])[:n]
     executed = int(np.asarray(st.st_exec[b]))
     enroute = int(np.asarray(st.st_enroute[b]))
     return RunResult(
         cycles=cycles,
-        mem_val=np.asarray(st.mem_val[b]),
+        mem_val=np.asarray(st.mem_val[b])[:n],
         utilization=executed / max(1, cycles * n),
         busy_frac=float(per_pe_busy.sum()) / max(1, cycles * n),
         per_pe_busy=per_pe_busy,
@@ -1015,15 +1131,14 @@ def _lane_result(cfg: MachineConfig, st: MachineState, done: bool,
         enroute_frac=enroute / max(1, executed),
         hops=int(np.asarray(st.st_hops[b])),
         injected=int(np.asarray(st.st_inj[b])),
-        stall_per_port=np.asarray(st.st_stall[b]),
+        stall_per_port=np.asarray(st.st_stall[b])[:n],
         completed=done,
     )
 
 
-def run_many(cfg: MachineConfig, workloads, *, modes=None,
+def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
              chunk: int = 512) -> list[RunResult]:
-    """Simulate B workloads on one fabric configuration in a single batched
-    on-device run.
+    """Simulate B workloads in a single batched on-device run.
 
     Args:
       cfg: shared static machine parameters.  ``mem_words`` is widened
@@ -1039,10 +1154,18 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None,
         every lane runs the mode described by ``cfg``'s flags.  Mixing
         modes in one batch requires ``cfg.traced_modes`` (the default);
         the whole grid then shares one compiled engine.
+      geoms: optional per-lane mesh geometries — a sequence of
+        ``(width, height)`` pairs, one per lane.  Defaults to the batch's
+        own ``geoms`` (compiled workloads record theirs, so mixed-size
+        sequences just work), else every lane runs on ``cfg``'s mesh.
+        Mixing sizes in one batch requires ``cfg.traced_geometry`` (the
+        default); all PE axes are padded to the batch maximum and the
+        whole (workload x mode x size) grid shares one compiled engine.
 
     Returns:
       One :class:`RunResult` per lane, in input order — metrics are exactly
-      what a solo :func:`run` of that workload would report.  A lane that
+      what a solo :func:`run` of that workload would report (PE-indexed
+      arrays restricted to the lane's own width*height mesh).  A lane that
       hits ``cfg.max_cycles`` without reaching idle returns
       ``completed=False`` with its cycle counter and statistics frozen at
       the cap; its ``mem_val`` (like any non-completed run's) is undefined.
@@ -1053,10 +1176,37 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None,
     """
     from repro.core.batch import BatchedWorkloads, stack_workloads
     if not isinstance(workloads, BatchedWorkloads):
-        workloads = stack_workloads(workloads)
-    if workloads.n_pes != cfg.n_pes:
-        raise ValueError(f"batch compiled for {workloads.n_pes} PEs but cfg "
-                         f"has {cfg.n_pes}")
+        workloads = stack_workloads(workloads, geoms=geoms)
+        geoms = None        # now carried on the batch
+    n_max = workloads.n_pes
+    if geoms is None:
+        geoms = workloads.geoms
+    if geoms is None:
+        # no geometry information anywhere: every lane runs on cfg's mesh,
+        # so the (unpadded) batch must have been compiled for exactly it.
+        if n_max != cfg.n_pes:
+            raise ValueError(f"batch compiled for {n_max} PEs but cfg "
+                             f"has {cfg.n_pes}")
+        lane_geoms = np.tile(np.array([[cfg.width, cfg.height]], np.int32),
+                             (workloads.batch, 1))
+    else:
+        lane_geoms = np.asarray(geoms, np.int32)
+        if lane_geoms.shape != (workloads.batch, 2):
+            raise ValueError(f"geoms shape {lane_geoms.shape} for "
+                             f"{workloads.batch} lanes (want (B, 2))")
+        if (lane_geoms[:, 0] * lane_geoms[:, 1] > n_max).any():
+            raise ValueError("lane geometry exceeds the batch PE axis "
+                             f"({n_max} PEs)")
+        if not cfg.traced_geometry:
+            if ((lane_geoms[:, 0] != cfg.width)
+                    | (lane_geoms[:, 1] != cfg.height)).any():
+                raise ValueError(
+                    "per-lane geometries differing from the config require "
+                    "cfg.traced_geometry=True (static engines bake the "
+                    "mesh into the trace)")
+            if n_max != cfg.n_pes:
+                raise ValueError(f"batch padded to {n_max} PEs but the "
+                                 f"static-geometry cfg has {cfg.n_pes}")
     if workloads.mem_words > cfg.mem_words:
         cfg = dataclasses.replace(cfg, mem_words=workloads.mem_words)
 
@@ -1079,16 +1229,18 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None,
         jnp.asarray(workloads.amq_len, jnp.int32),
         jnp.asarray(workloads.mem_val, jnp.int32),
         jnp.asarray(workloads.mem_meta, jnp.int32))
-    engine = _get_engine(cfg, chunk)
+    engine = _get_engine(cfg, chunk, n_max)
     st, over, idle = engine(jnp.asarray(workloads.prog, jnp.int32),
-                            jnp.asarray(lane_modes, jnp.int32), st)
+                            jnp.asarray(lane_modes, jnp.int32),
+                            jnp.asarray(lane_geoms, jnp.int32), st)
     over = np.asarray(over)
     if over.any():
         raise RuntimeError("pending-FIFO overflow: consumption guarantee "
                            "violated (simulator invariant; lanes "
                            f"{np.nonzero(over)[0].tolist()})")
     idle = np.asarray(idle)
-    return [_lane_result(cfg, st, bool(idle[b]), b)
+    return [_lane_result(cfg, st, bool(idle[b]), b,
+                         int(lane_geoms[b, 0] * lane_geoms[b, 1]))
             for b in range(workloads.batch)]
 
 

@@ -1,0 +1,16 @@
+"""Shared test configuration.
+
+CI wires the persistent XLA compile cache through here: when
+``NEXUS_XLA_CACHE`` is set (to a directory path, restored across runs by
+actions/cache), every engine compile in the suite is served from / saved
+to disk, so a warm-cache CI run skips the expensive one-time compiles
+entirely.  Local runs are unaffected unless the variable is exported.
+"""
+import os
+
+
+def pytest_configure(config):
+    path = os.environ.get("NEXUS_XLA_CACHE")
+    if path:
+        from repro.core import machine
+        machine.enable_persistent_compile_cache(os.path.expanduser(path))

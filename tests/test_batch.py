@@ -109,24 +109,35 @@ def test_engine_cache_reuse(mixed):
     cfg, wls = mixed
     machine.run_many(cfg, [wls[0]])
     before = machine.engine_cache_size()
-    engine = machine._ENGINE_CACHE[(cfg, 512, machine.PEND_CAP,
-                                    machine.STREAM_THROTTLE)]
+    engine = machine._ENGINE_CACHE[machine._engine_key(cfg, cfg.n_pes, 512)]
     traces = engine._cache_size()
     machine.run_many(cfg, [wls[1]])   # different program, same shapes
     assert machine.engine_cache_size() == before
     assert engine._cache_size() == traces
 
 
-def test_fabric_size_mismatch_rejected(mixed):
+def test_fabric_size_mismatch_rejected_on_static_path(mixed):
+    """Without per-lane geometry (bare tuples / traced_geometry=False)
+    fabric sizes must still match — the pre-geometry contract."""
     cfg, wls = mixed
     other = MachineConfig(width=2, height=2, mem_words=1024)
     a = compiler.random_sparse(8, 8, 0.4, RNG)
     x = RNG.integers(-4, 5, size=(8,))
     small_fab = compiler.build_spmv(a, x, other)
+    # bare tuples carry no geometry: mixed sizes cannot be stacked
+    as_tuple = (small_fab.prog, small_fab.static_ams, small_fab.amq_len,
+                small_fab.mem_val, small_fab.mem_meta)
     with pytest.raises(ValueError, match="fabric sizes must match"):
-        machine.run_many(cfg, [wls[0], small_fab])
+        machine.run_many(cfg, [wls[0], as_tuple])
     with pytest.raises(ValueError, match="PEs"):
-        machine.run_many(other, [wls[0]])
+        machine.run_many(other, [(wls[0].prog, wls[0].static_ams,
+                                  wls[0].amq_len, wls[0].mem_val,
+                                  wls[0].mem_meta)])
+    # a static-geometry engine rejects lanes off the baked-in mesh
+    import dataclasses
+    static_cfg = dataclasses.replace(cfg, traced_geometry=False)
+    with pytest.raises(ValueError, match="traced_geometry"):
+        machine.run_many(static_cfg, [wls[0], small_fab])
 
 
 @pytest.mark.slow

@@ -59,6 +59,29 @@ def test_grid_covers_every_mode(tiny_table):
     assert tiny_table["spmv"]["archs"]["tia_valiant"]["enroute"] == 0
 
 
+def test_mixed_geometry_lanes_match_solo_runs():
+    """Fast-tier pin of the geometry axis: a 2x2 lane and a 4x4 lane of
+    the same workload in ONE run_many match their per-size solo runs,
+    per-PE arrays restricted to each lane's own mesh."""
+    a = compiler.random_sparse(8, 8, 0.4, RNG)
+    x = RNG.integers(-3, 4, size=(8,))
+    lanes = []
+    for (w, h) in [(2, 2), (4, 4)]:
+        cfg = MachineConfig(width=w, height=h, mem_words=1024,
+                            max_cycles=100_000)
+        lanes.append((cfg, compiler.build_spmv(a, x, cfg)))
+    batched = machine.run_many(lanes[0][0], [wl for _, wl in lanes])
+    for (cfg, wl), m in zip(lanes, batched):
+        s = machine.run(cfg, wl.prog, wl.static_ams, wl.amq_len,
+                        wl.mem_val, wl.mem_meta)
+        assert (m.cycles, m.executed, m.enroute, m.hops, m.injected) == \
+            (s.cycles, s.executed, s.enroute, s.hops, s.injected)
+        assert m.per_pe_busy.shape == (cfg.n_pes,)
+        np.testing.assert_array_equal(m.per_pe_busy, s.per_pe_busy)
+        np.testing.assert_array_equal(m.stall_per_port, s.stall_per_port)
+        assert wl.check(m.mem_val)
+
+
 def test_fig_scripts_render_from_grid_slices(tiny_table, capsys):
     """Every paper-figure formatter consumes the grid table without
     crashing — including the n/a paths for archs the tiny grid omits

@@ -31,18 +31,19 @@ def test_pend_occupancy_never_exceeds_cap(monkeypatch):
     cyc = machine._make_cycle(cfg)
 
     @jax.jit
-    def step_window(prog, mode, st):
+    def step_window(prog, mode, geom, st):
         def sub(s, _):
-            s2 = cyc(prog, mode, s)
+            s2 = cyc(prog, mode, geom, s)
             return s2, jnp.max(s2.pend_n)
         st, occ = jax.lax.scan(sub, st, None, length=WINDOW)
         return st, jnp.max(occ)   # max over every cycle in the window
 
     prog = jnp.asarray(wl.prog, jnp.int32)
     mode = jnp.int32(machine.mode_code(cfg))
+    geom = jnp.asarray([cfg.width, cfg.height], jnp.int32)
     max_occ, idle = 0, False
     for _ in range(cfg.max_cycles // WINDOW):
-        st, occ = step_window(prog, mode, st)
+        st, occ = step_window(prog, mode, geom, st)
         max_occ = max(max_occ, int(occ))
         assert max_occ <= machine.PEND_CAP, "pending FIFO overflowed"
         if bool(machine.is_idle(st)):

@@ -1,0 +1,179 @@
+"""Golden geometry-equivalence suite for the traced fabric-geometry engine.
+
+The mesh geometry (width x height) is per-lane runtime data to the
+compiled engine: every MachineState PE axis is padded to the batch-wide
+N_max and routing/neighbor indices derive from a traced (width, height)
+vector.  These tests pin the PR-1/PR-2 equivalence discipline on the new
+axis:
+
+  * for every mesh size, the traced-geometry engine's RunResult is
+    bit-identical to the static engine (``traced_geometry=False``, mesh
+    baked into the trace — the pre-traced golden path);
+  * a mixed-geometry ``run_many`` batch (2x2, 4x4, 8x8 lanes in one call)
+    matches the per-size solo runs bit-for-bit, including per-PE
+    busy/stall arrays restricted to the active PEs;
+  * the full (workload x size) grid compiles exactly ONE engine.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import batch, compiler, machine
+from repro.core.machine import MachineConfig
+
+RNG = np.random.default_rng(77)
+SIZES = [(2, 2), (4, 4), (8, 8)]
+
+
+def _cfg(w=4, h=4, **kw):
+    kw.setdefault("mem_words", 1024)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(width=w, height=h, **kw)
+
+
+def _sig(r):
+    """Every per-lane metric of a RunResult, hashable for == comparison."""
+    return (r.cycles, r.executed, r.enroute, r.hops, r.injected,
+            r.completed, r.utilization, r.busy_frac, r.enroute_frac,
+            tuple(np.asarray(r.per_pe_busy).tolist()),
+            tuple(np.asarray(r.stall_per_port).ravel().tolist()))
+
+
+def _solo(cfg, wl):
+    return machine.run(cfg, wl.prog, wl.static_ams, wl.amq_len, wl.mem_val,
+                       wl.mem_meta)
+
+
+@pytest.fixture(scope="module")
+def per_size():
+    """One SpMV + one BFS per mesh size (placement is size-dependent)."""
+    from benchmarks.workloads import small_world_graph
+    a = compiler.random_sparse(16, 16, 0.3, RNG)
+    x = RNG.integers(-4, 5, size=(16,))
+    rp, col = small_world_graph(24, 4, 3)
+    out = {}
+    for (w, h) in SIZES:
+        cfg = _cfg(w, h)
+        out[w, h] = cfg, {
+            "spmv": compiler.build_spmv(a, x, cfg),
+            "bfs": compiler.build_bfs(rp, col, 0, cfg),
+        }
+    return out
+
+
+def test_traced_matches_static_fast_spot_check(per_size):
+    """Fast-tier pin of the static==traced-geometry claim on a non-default
+    mesh (2x2 exercises every boundary direction of the traced neighbor
+    computation); the full size grid runs in the slow tier."""
+    cfg, by_name = per_size[2, 2]
+    wl = by_name["spmv"]
+    s = _solo(dataclasses.replace(cfg, traced_geometry=False), wl)
+    t = _solo(cfg, wl)
+    assert _sig(s) == _sig(t)
+    np.testing.assert_array_equal(s.mem_val, t.mem_val)
+    assert wl.check(t.mem_val)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("size", SIZES)
+def test_traced_engine_matches_static_golden(size, per_size):
+    """Traced-geometry engine == static (mesh-baked) engine, bit for bit,
+    at every mesh size and for both a regular and a graph workload."""
+    cfg, by_name = per_size[size]
+    static_cfg = dataclasses.replace(cfg, traced_geometry=False)
+    for name, wl in by_name.items():
+        s = _solo(static_cfg, wl)
+        t = _solo(cfg, wl)
+        assert _sig(s) == _sig(t), (size, name)
+        np.testing.assert_array_equal(s.mem_val, t.mem_val,
+                                      err_msg=f"{size}/{name}")
+        assert wl.check(t.mem_val), (size, name)
+
+
+def test_mixed_geometry_batch_matches_solo_runs(per_size):
+    """2x2, 4x4 and 8x8 lanes in ONE run_many == per-size solo runs,
+    bit-for-bit, with per-PE arrays restricted to each lane's active
+    PEs."""
+    lanes = [(size, per_size[size][0], per_size[size][1]["spmv"])
+             for size in SIZES]
+    machine.clear_engine_cache()
+    run_cfg = _cfg()   # geometry irrelevant: every lane carries its own
+    results = machine.run_many(run_cfg, [wl for _, _, wl in lanes])
+    assert machine.engine_cache_size() == 1
+    for ((w, h), cfg, wl), m in zip(lanes, results):
+        s = _solo(cfg, wl)
+        assert _sig(s) == _sig(m), (w, h)
+        # PE-indexed arrays come back at the lane's own mesh size
+        assert m.per_pe_busy.shape == (w * h,)
+        assert m.stall_per_port.shape == (w * h, machine.PORTS)
+        np.testing.assert_array_equal(
+            s.mem_val, m.mem_val[:, :s.mem_val.shape[1]], err_msg=f"{w}x{h}")
+        assert wl.check(m.mem_val), (w, h)
+
+
+@pytest.mark.slow
+def test_full_size_by_workload_grid_one_engine(per_size):
+    """The whole (size x workload) grid — and follow-up solo runs at any
+    single size padded to the same N_max — share ONE compiled engine."""
+    lanes = [wl for size in SIZES for wl in per_size[size][1].values()]
+    machine.clear_engine_cache()
+    results = machine.run_many(_cfg(), lanes)
+    assert machine.engine_cache_size() == 1
+    assert all(r.completed for r in results)
+    # same padded axis (explicit geoms pad to 64) -> same engine
+    wl22 = per_size[2, 2][1]["spmv"]
+    machine.run_many(_cfg(), [wl22, wl22], geoms=[(2, 2), (8, 8)])
+    assert machine.engine_cache_size() == 1
+
+
+def test_geoms_carried_on_stacked_batch(per_size):
+    """stack_workloads infers per-lane geometry from CompiledWorkload.geom
+    and pads every PE axis to the batch maximum."""
+    wls = [per_size[size][1]["spmv"] for size in SIZES]
+    stacked = batch.stack_workloads(wls)
+    np.testing.assert_array_equal(stacked.geoms, [[2, 2], [4, 4], [8, 8]])
+    assert stacked.n_pes == 64
+    assert stacked.static_ams.shape[1] == 64
+    assert stacked.mem_val.shape[1] == 64
+    # padded PE rows are all-zero (inactive PEs hold zero state)
+    assert (stacked.static_ams[0, 4:] == 0).all()
+    assert (stacked.amq_len[0, 4:] == 0).all()
+    assert (stacked.mem_val[0, 4:] == 0).all()
+
+
+def test_mode_and_geometry_axes_compose(per_size):
+    """One batch mixing fabric modes AND mesh sizes still matches the
+    per-(mode, size) solo runs."""
+    points = [("nexus", (2, 2)), ("tia", (4, 4)), ("tia_valiant", (2, 2))]
+    lanes = [per_size[size][1]["spmv"] for _, size in points]
+    results = machine.run_many(_cfg(), lanes,
+                               modes=[m for m, _ in points])
+    for (mode, size), m in zip(points, results):
+        cfg = dataclasses.replace(per_size[size][0],
+                                  **machine.mode_flags(mode))
+        s = _solo(cfg, per_size[size][1]["spmv"])
+        assert _sig(s) == _sig(m), (mode, size)
+    assert results[0].enroute > 0          # nexus lane intercepts
+    assert results[1].enroute == 0         # tia lane does not
+
+
+def test_static_geometry_rejects_mixed_sizes(per_size):
+    cfg22, by22 = per_size[2, 2]
+    _, by44 = per_size[4, 4]
+    static_cfg = dataclasses.replace(cfg22, traced_geometry=False)
+    with pytest.raises(ValueError, match="traced_geometry"):
+        machine.run_many(static_cfg, [by22["spmv"], by44["spmv"]])
+
+
+def test_geometry_validation():
+    """Geometries that cannot hold the compiled placement are rejected."""
+    cfg = _cfg(4, 4)
+    wl = compiler.build_spmv(
+        compiler.random_sparse(8, 8, 0.4, RNG),
+        RNG.integers(-4, 5, size=(8,)), cfg)
+    with pytest.raises(ValueError, match="inactive PEs"):
+        batch.stack_workloads([wl], geoms=[(2, 2)])
+    stacked = batch.stack_workloads([wl])
+    with pytest.raises(ValueError, match="exceeds the batch PE axis"):
+        machine.run_many(cfg, stacked, geoms=[(8, 8)])
