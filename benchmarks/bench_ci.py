@@ -8,8 +8,10 @@ trajectory of the repo accumulates run over run:
     fabric modes on a 2x2 mesh through ``harness.run_grid``): per-lane
     cycles / utilization / executed, grid wall-clock, engine-cache size.
   * ``BENCH_fig17.json`` — the batched Fig. 17 scaling sweep (3 workloads
-    x 2x2/4x4/8x8 meshes as ONE ``run_many`` call): per-point cycles /
-    utilization, sweep wall-clock, engine-cache size.
+    x 2x2/4x4/8x8 meshes as ONE packed ``run_many`` call, small meshes
+    co-scheduled as sub-meshes of shared super-lanes): per-point cycles /
+    utilization, sweep wall-clock, engine-cache size, packing efficiency
+    (occupied / padded-stepped PE fraction) and lanes-per-engine.
 
 Perf-regression gates (exit 1 on violation):
 
@@ -19,7 +21,11 @@ Perf-regression gates (exit 1 on violation):
     that must be acknowledged by re-running with ``--update-golden``;
   * ``machine.engine_cache_size()`` must be exactly 1 after each full
     grid — more means a lane silently recompiled (the mode/geometry axes
-    stopped being runtime data).
+    stopped being runtime data);
+  * the fig17 sweep's ``packing_efficiency`` must be at least the
+    unpacked baseline's occupied/padded fraction — less means the packer
+    stopped co-tenanting small meshes and the padded PE axis is dead
+    cost again.
 
     PYTHONPATH=src python -m benchmarks.bench_ci --out experiments/ci
     PYTHONPATH=src python -m benchmarks.bench_ci --update-golden
@@ -95,21 +101,33 @@ def run_smoke() -> dict:
         }
         for i, wl in enumerate(wls)
     }
+    n_lanes = len(wls) * len(grid)
     return dict(meta=_meta(), wall_s=round(wall, 3),
-                engine_cache_size=machine.engine_cache_size(), grid=table)
+                engine_cache_size=machine.engine_cache_size(),
+                lanes_per_engine=n_lanes / machine.engine_cache_size(),
+                grid=table)
 
 
 def run_fig17() -> dict:
     """The batched Fig. 17 sweep: the whole sizes x workloads grid as ONE
-    run_many call on one compiled engine."""
+    packed run_many call on one compiled engine (small meshes
+    co-scheduled inside shared padded super-lanes)."""
     from benchmarks import fig17_scaling
     from repro.core import machine
     machine.clear_engine_cache()
+    pack_stats: dict = {}
     t0 = time.time()
-    data = fig17_scaling.run_grid(fig17_scaling._builders())
+    data = fig17_scaling.run_grid(fig17_scaling._builders(),
+                                  pack_stats=pack_stats)
     wall = time.time() - t0
+    n_lanes = sum(len(v) for v in data.values())
     return dict(meta=_meta(), wall_s=round(wall, 3),
-                engine_cache_size=machine.engine_cache_size(), grid=data)
+                engine_cache_size=machine.engine_cache_size(),
+                lanes_per_engine=n_lanes / machine.engine_cache_size(),
+                packing_efficiency=pack_stats["packing_efficiency"],
+                unpacked_efficiency=pack_stats["unpacked_efficiency"],
+                n_waves=pack_stats["n_waves"],
+                grid=data)
 
 
 def check_golden(smoke: dict, update: bool) -> list[str]:
@@ -176,12 +194,21 @@ def main() -> int:
         with open(os.path.join(args.out, "BENCH_fig17.json"), "w") as f:
             json.dump(fig17, f, indent=1)
         print(f"fig17 sweep: wall={fig17['wall_s']}s "
-              f"engines={fig17['engine_cache_size']}")
+              f"engines={fig17['engine_cache_size']} "
+              f"packing_efficiency={fig17['packing_efficiency']:.3f} "
+              f"(unpacked {fig17['unpacked_efficiency']:.3f}, "
+              f"{fig17['n_waves']} waves)")
         if fig17["engine_cache_size"] != 1:
             failures.append("fig17 size grid compiled "
                             f"{fig17['engine_cache_size']} engines "
                             "(want 1): geometry stopped being runtime "
                             "data")
+        if fig17["packing_efficiency"] < fig17["unpacked_efficiency"]:
+            failures.append(
+                "fig17 packing efficiency "
+                f"{fig17['packing_efficiency']:.3f} fell below the "
+                f"unpacked baseline {fig17['unpacked_efficiency']:.3f}: "
+                "the packer stopped co-tenanting small meshes")
 
     if failures:
         print("\nPERF-REGRESSION GATE FAILED:", file=sys.stderr)

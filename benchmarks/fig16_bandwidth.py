@@ -57,20 +57,25 @@ def spmspm_traffic(n: int, d: float, sram_bytes: float) -> dict:
                 out_density=d_out, refetch=refetch)
 
 
-def simulate_sparsity_axis(n: int = 24, seed: int = 13) -> dict:
+def simulate_sparsity_axis(n: int = 24, seed: int = 13, *,
+                           sparsities=(0.30, 0.60, 0.85),
+                           mem_words: int = 4096) -> dict:
     """Validate the analytic sparsity terms against the simulator.
 
-    Builds one small SpMSpM per sparsity level and runs the whole grid as a
-    single batched on-device sweep; compares measured output density with
-    the model's ``d_out`` and checks the executed-op trend follows the
-    ``d²`` compute term.
+    Builds one small SpMSpM per sparsity level and runs the whole grid
+    through the packed ``run_many`` path — one call, one compiled
+    engine, the sparsity points co-scheduled by the sub-mesh lane packer
+    (same-size meshes here, so the packer's value is the shared engine
+    and schedule; mixed-size callers get sub-mesh co-tenancy for free).
+    Compares measured output density with the model's ``d_out`` and
+    checks the executed-op trend follows the ``d²`` compute term.
     """
     from repro.core import compiler, machine
     from repro.core.machine import MachineConfig
 
     rng = np.random.default_rng(seed)
-    sparsities = [0.30, 0.60, 0.85]
-    cfg = MachineConfig(mem_words=4096, max_cycles=400_000)
+    sparsities = list(sparsities)
+    cfg = MachineConfig(mem_words=mem_words, max_cycles=400_000)
     wls, dens = [], []
     for sp in sparsities:
         d = 1.0 - sp
@@ -78,7 +83,7 @@ def simulate_sparsity_axis(n: int = 24, seed: int = 13) -> dict:
         b = compiler.random_sparse(n, n, d, rng)
         wls.append(compiler.build_spmspm(a, b, cfg))
         dens.append(d)
-    results = machine.run_many(cfg, wls)
+    results = machine.run_many(cfg, wls, pack=True)
 
     print("-" * 78)
     print("simulated cross-check (batched sweep, one device call): "

@@ -5,12 +5,16 @@ claim (slope flattens when the problem no longer covers the fabric).
 
 The mesh geometry is per-lane *runtime data* to the compiled engine
 (``MachineConfig.traced_geometry``), so the ENTIRE sizes x workloads grid
-stacks into the lanes of ONE ``machine.run_many`` call: every PE axis pads
-to the 8x8 maximum, each lane carries its ``(width, height)`` vector, and
-the whole sweep costs one engine compile and one device call
-(``machine.engine_cache_size() == 1`` afterwards).  ``--bench`` times this
-single-engine grid against the per-size-compile baseline (one batched run
-per mesh size, each paying its own trace — the PR-2 state of this script).
+stacks into the lanes of ONE ``machine.run_many`` call — and with
+``pack=True`` (the default here) small meshes are co-scheduled as
+disjoint sub-meshes of shared 8x8 super-lanes
+(``repro.core.batch.pack_schedule``), so the padded PE axis carries
+useful work instead of dead rows: the whole sweep costs one engine
+compile (``machine.engine_cache_size() == 1`` afterwards) and a handful
+of wave dispatches.  ``--bench`` times the packed grid against BOTH the
+per-size-compile baseline (one batched run per mesh size, each paying
+its own trace — the PR-2 state of this script) and the unpacked
+one-engine grid (the PR-3 state, which padded every lane to 8x8).
 """
 from __future__ import annotations
 
@@ -61,15 +65,20 @@ def build_grid(builders, sizes=SIZES):
     return lanes
 
 
-def run_grid(builders, sizes=SIZES) -> dict:
-    """The entire sizes x workloads grid in ONE batched device call.
+def run_grid(builders, sizes=SIZES, *, pack: bool = True,
+             pack_stats: dict | None = None) -> dict:
+    """The entire sizes x workloads grid in ONE packed ``run_many`` call.
 
     Returns {workload: {"WxH": {cycles, utilization}}} — the Fig. 17
-    table — after asserting every lane completed bit-exact.
+    table — after asserting every lane completed bit-exact.  With
+    ``pack`` (default) small meshes are co-scheduled inside shared
+    padded super-lanes; ``pack_stats`` receives the packing-efficiency
+    numbers.
     """
     lanes = build_grid(builders, sizes)
     results = machine.run_many(_size_cfg(*sizes[0]),
-                               [wl for _, _, wl in lanes])
+                               [wl for _, _, wl in lanes], pack=pack,
+                               pack_stats=pack_stats)
     out: dict = {name: {} for name in builders}
     for ((w, h), name, wl), r in zip(lanes, results):
         assert r.completed and wl.check(r.mem_val), f"{name} @ {w}x{h}"
@@ -138,23 +147,21 @@ def bench_smoke(sizes=SIZES) -> dict:
 
 
 def bench() -> dict:
-    """Time the full sizes x workloads sweep: one-engine grid (all lanes in
-    one run_many, geometry traced) vs the per-size-compile baseline (one
-    batched run per mesh size — each distinct geometry paying its own
-    engine trace, as this script did before traced geometry).
+    """Time the full sizes x workloads sweep three ways: the PACKED
+    one-call grid (sub-mesh lane packing, the default ``run_grid`` path)
+    vs the per-size-compile baseline (one batched run per mesh size —
+    each distinct geometry paying its own engine trace, the PR-2 state)
+    vs the unpacked one-engine grid (every lane padded to 8x8, the PR-3
+    state whose run-time regression packing reverses).
 
     Prints cold numbers (including compiles) and steady-state numbers
-    (engines cached in-process), for BOTH regimes:
-
-      * paper scale (the real Fig. 17 workloads): on CPU this sweep is
-        run-bound — the 2x2 lanes run thousands of cycles, and stepping
-        them at the padded 8x8 PE axis costs more than the two saved
-        engine compiles, so the one-engine grid trades cold compile time
-        for run time (reported honestly below; on accelerators with idle
-        lanes the padded width is close to free, and sub-mesh lane
-        packing is the ROADMAP fix for CPU);
-      * smoke scale (:func:`bench_smoke`): compile-bound — the one-engine
-        grid's single compile IS the win."""
+    (engines cached in-process).  Paper scale is run-bound on CPU: the
+    unpacked grid steps 9 x 64 padded PE rows for as long as the slowest
+    2x2 lane runs, while the packed schedule steps one 64-PE super-lane
+    per wave — so packing recovers the per-size run cost AND keeps the
+    single-compile cold win.  Smoke scale (:func:`bench_smoke`) is
+    compile-bound — there the one-engine grid's single compile IS the
+    win."""
     import jax
 
     builders = _builders()
@@ -192,27 +199,53 @@ def bench() -> dict:
     grid = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes])
     t_warm = time.time() - t0
 
-    # per-lane metrics identical between the two paths
-    it = iter(grid)
+    pack_stats: dict = {}
+    machine.clear_engine_cache()
+    t0 = time.time()
+    packed = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes],
+                              pack=True, pack_stats=pack_stats)
+    t_pack_cold = time.time() - t0
+    n_pack_engines = machine.engine_cache_size()
+    t0 = time.time()
+    packed = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes],
+                              pack=True)
+    t_pack_warm = time.time() - t0
+
+    # per-lane metrics identical between all three paths
+    it = iter(zip(grid, packed))
     for (w, h) in SIZES:
         for s in per_size[w, h]:
-            g = next(it)
+            g, p = next(it)
             assert (s.cycles, s.executed, s.hops) == (g.cycles, g.executed,
                                                       g.hops)
+            assert (s.cycles, s.executed, s.hops) == (p.cycles, p.executed,
+                                                      p.hops)
     print(f"fig17 grid ({len(SIZES)} sizes x {len(builders)} workloads = "
           f"{len(lanes)} lanes), metrics identical:")
     print(f"  per-size batches, {n_seq_engines} engine compiles, cold: "
           f"{t_seq_cold:.1f}s   (steady: {t_seq_warm:.1f}s)")
-    print(f"  one-engine grid,  {n_grid_engines} engine compile,  cold: "
+    print(f"  unpacked grid,    {n_grid_engines} engine compile,  cold: "
           f"{t_cold:.1f}s  -> {t_seq_cold / t_cold:.1f}x   "
           f"(steady: {t_warm:.1f}s)")
+    print(f"  packed grid,      {n_pack_engines} engine compile,  cold: "
+          f"{t_pack_cold:.1f}s  -> {t_seq_cold / t_pack_cold:.1f}x   "
+          f"(steady: {t_pack_warm:.1f}s -> "
+          f"{t_seq_warm / t_pack_warm:.1f}x)")
+    print(f"  packing: {pack_stats['n_waves']} waves, efficiency "
+          f"{pack_stats['packing_efficiency']:.2f} (unpacked "
+          f"{pack_stats['unpacked_efficiency']:.2f})")
     smoke = bench_smoke()
     return dict(per_size_cold_s=t_seq_cold, per_size_warm_s=t_seq_warm,
                 per_size_engines=n_seq_engines,
                 grid_cold_s=t_cold, grid_warm_s=t_warm,
                 grid_engines=n_grid_engines,
+                packed_cold_s=t_pack_cold, packed_warm_s=t_pack_warm,
+                packed_engines=n_pack_engines,
                 speedup_cold=t_seq_cold / t_cold,
                 speedup_warm=t_seq_warm / t_warm,
+                packed_speedup_cold=t_seq_cold / t_pack_cold,
+                packed_speedup_warm=t_seq_warm / t_pack_warm,
+                pack_stats=pack_stats,
                 smoke=smoke)
 
 

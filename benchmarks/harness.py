@@ -66,7 +66,8 @@ def _result_row(res, batch_wall: float) -> dict:
 
 def run_grid(wls: list[Workload], modes=None, *,
              base_cfg: MachineConfig | None = None,
-             max_cycles: int = 400_000, sizes=None) -> dict:
+             max_cycles: int = 400_000, sizes=None, pack: bool = False,
+             pack_stats: dict | None = None) -> dict:
     """Run the full (workload x fabric-mode [x mesh-size]) grid in ONE
     batched device call.
 
@@ -78,6 +79,12 @@ def run_grid(wls: list[Workload], modes=None, *,
     whatever its mode or mesh.  ``modes`` entries may be ``FABRIC_MODES``
     names or raw mode bitmasks (ablation lanes); ``sizes`` entries are
     ``(width, height)`` pairs (placement is recomputed per size).
+
+    ``pack=True`` opts mixed-size grids into sub-mesh lane packing:
+    small lanes co-schedule inside shared padded super-lanes instead of
+    each stepping the full padded PE axis (see
+    ``repro.core.batch.pack_schedule``; metrics stay bit-identical).
+    ``pack_stats`` receives the packing-efficiency numbers.
 
     Returns ``{mode: [result-row per workload, in input order]}`` when
     ``sizes`` is None (the classic Figs. 11-14 grid on ``base_cfg``'s
@@ -107,7 +114,8 @@ def run_grid(wls: list[Workload], modes=None, *,
         base_cfg, mem_words=max(wl.mem_words for wl in wls),
         max_cycles=max_cycles)
     t0 = time.time()
-    results = machine.run_many(run_cfg, built, modes=lane_modes)
+    results = machine.run_many(run_cfg, built, modes=lane_modes, pack=pack,
+                               pack_stats=pack_stats)
     wall = time.time() - t0
     out: dict = {}
     lanes = iter(zip(built, results))

@@ -84,14 +84,19 @@ def fmt(rec):
 
 
 def fabric_autotune(workload: str = "spmv", sizes=None, *,
-                    builders=None, save: bool = True) -> dict:
+                    builders=None, save: bool = True,
+                    pack: bool = True) -> dict:
     """Pick the best mesh geometry for a workload by running EVERY
     candidate as a lane of one batched device call.
 
-    Scores both ends of the trade: latency (cycles) and efficiency
-    (cycles x PEs — the area-delay proxy).  Returns the scored table with
-    the argmin of each; with ``save`` the record lands in
-    experiments/perf/fabric__<workload>.json.
+    With ``pack`` (default) the candidate meshes are co-scheduled as
+    disjoint sub-meshes of shared padded super-lanes
+    (``machine.run_many(pack=True)``) instead of each small candidate
+    stepping the full padded PE axis; the packing plan the search ran
+    over is logged in the record.  Scores both ends of the trade:
+    latency (cycles) and efficiency (cycles x PEs — the area-delay
+    proxy).  Returns the scored table with the argmin of each; with
+    ``save`` the record lands in experiments/perf/fabric__<workload>.json.
     """
     from repro.core import machine
     if builders is None:
@@ -103,7 +108,9 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
     sizes = FABRIC_SIZES if sizes is None else list(sizes)
     from benchmarks.fig17_scaling import _size_cfg
     lanes = [builders[workload](_size_cfg(w, h)) for (w, h) in sizes]
-    results = machine.run_many(_size_cfg(*sizes[0]), lanes)
+    pack_stats: dict = {}
+    results = machine.run_many(_size_cfg(*sizes[0]), lanes, pack=pack,
+                               pack_stats=pack_stats if pack else None)
     table = {}
     for (w, h), wl, r in zip(sizes, lanes, results):
         assert r.completed and wl.check(r.mem_val), f"{workload} @ {w}x{h}"
@@ -114,7 +121,8 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
     best_eff = min(table, key=lambda k: table[k]["cycle_pes"])
     rec = dict(workload=workload, table=table, best_latency=best_lat,
                best_efficiency=best_eff,
-               engine_cache_size=machine.engine_cache_size())
+               engine_cache_size=machine.engine_cache_size(),
+               packed=pack, pack_stats=pack_stats or None)
     if save:
         os.makedirs(OUT, exist_ok=True)
         with open(os.path.join(OUT, f"fabric__{workload}.json"), "w") as f:
@@ -136,10 +144,17 @@ def main():
                          "(one batched run over --sizes)")
     ap.add_argument("--sizes", default=None,
                     help="candidate geometries, e.g. 2x2,4x4,8x8")
+    ap.add_argument("--pack", dest="pack", action="store_true",
+                    default=True,
+                    help="co-schedule candidate meshes as sub-meshes of "
+                         "shared padded super-lanes (default)")
+    ap.add_argument("--no-pack", dest="pack", action="store_false",
+                    help="one padded lane per candidate (the pre-packing "
+                         "behaviour)")
     args = ap.parse_args()
     if args.fabric:
         sizes = _parse_sizes(args.sizes) if args.sizes else None
-        rec = fabric_autotune(args.fabric, sizes)
+        rec = fabric_autotune(args.fabric, sizes, pack=args.pack)
         for sz, row in rec["table"].items():
             print(f"{args.fabric} @ {sz:<5} cycles={row['cycles']:>8} "
                   f"cycle*PEs={row['cycle_pes']:>9} "
@@ -147,6 +162,17 @@ def main():
         print(f"best latency: {rec['best_latency']}   "
               f"best efficiency: {rec['best_efficiency']}   "
               f"(engines compiled: {rec['engine_cache_size']})")
+        if rec.get("pack_stats"):
+            ps = rec["pack_stats"]
+            print(f"packing plan searched: {ps['n_waves']} wave(s), "
+                  f"efficiency {ps['packing_efficiency']:.2f} "
+                  f"(unpacked {ps['unpacked_efficiency']:.2f})")
+            for wv, wave in enumerate(ps["plan"]):
+                placed = ", ".join(
+                    f"lane{p['lane']}@({p['origin'][0]},{p['origin'][1]}) "
+                    f"{p['geom'][0]}x{p['geom'][1]}"
+                    for p in wave["lanes"])
+                print(f"  wave {wv}: {placed}")
         return
     if not args.cell:
         raise SystemExit("need --cell arch:shape (or --fabric WORKLOAD)")

@@ -34,12 +34,43 @@ TIA / TIA-Valiant lanes across 2x2 … 8x8 meshes and still run in a single
 device call on a single compiled engine.  Compiled workloads record the
 geometry they were placed for (``CompiledWorkload.geom``), so stacking a
 mixed-size sequence needs no extra arguments.
+
+Sub-mesh lane packing
+---------------------
+Padding every lane's PE axis to the batch maximum makes small lanes pay
+for PEs they never use: a 2x2 lane in a batch with an 8x8 lane steps 64
+PE rows per cycle for 4 PEs of work.  :func:`plan_packing` +
+:func:`pack_workloads` remove that dead cost by co-scheduling several
+small lanes as **disjoint rectangular sub-meshes of one super-lane**:
+
+  * the planner is a deterministic 2-D shelf packer (first-fit decreasing
+    height, with column stacking inside shelves — the guillotine split)
+    over the lane geometries; lanes that do not fit the super mesh fall
+    back to a dedicated lane of their own native geometry;
+  * :func:`pack_workloads` rebases every packed workload into its
+    rectangle: PE ids in AM destination fields and compiler-placed
+    metadata (``CompiledWorkload.meta_pe``) are remapped through the
+    rectangle's coordinate shift, and each sub-lane's program rows are
+    concatenated with rebased PC offsets so co-tenants keep their own
+    config memories.
+
+Isolation needs no new mechanism: west-first minimal routing keeps every
+message inside the src->dst bounding box, which lies inside the sub-mesh
+rectangle, so disjoint rectangles never share a link, a buffer or a
+credit that matters.  The engine only needs per-sub-lane *accounting*
+(idle detection, cycle freeze, stats) — carried by the ``sub_ids`` /
+``local_ids`` per-PE vectors this module emits (see
+:mod:`repro.core.machine`).
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.core.am import (
+    F_DST0, F_DST1, F_DST2, F_PC, F_VALID, C_NEXT_PC,
+)
 
 # Programs are tiny (a handful of config rows); bucketing their padded
 # length keeps every workload on one jit specialization per fabric config.
@@ -59,6 +90,11 @@ class BatchedWorkloads:
                                      # (= every lane runs the cfg default)
     geoms: np.ndarray | None = None  # (B, 2) per-lane (width, height), or
                                      # None (= every lane on the cfg mesh)
+    sub_ids: np.ndarray | None = None    # (B, N) sub-lane slot per PE
+                                         # (packed batches only)
+    local_ids: np.ndarray | None = None  # (B, N) PE id within the
+                                         # sub-mesh (packed batches only)
+    plan: "PackPlan | None" = None       # how to un-pack per-lane results
 
     @property
     def batch(self) -> int:
@@ -184,3 +220,466 @@ def stack_workloads(workloads, modes=None, geoms=None) -> BatchedWorkloads:
         modes=mode_arr,
         geoms=geom_arr,
     )
+
+
+# ----------------------------------------------------------------------------
+# Sub-mesh lane packing
+# ----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SubLane:
+    """One lane's rectangle inside a super-lane's mesh."""
+
+    lane: int                  # index into the original workload sequence
+    super_lane: int            # output lane hosting this sub-mesh
+    origin: tuple[int, int]    # (x, y) of the rectangle's NW corner
+    geom: tuple[int, int]      # (width, height) of the sub-mesh
+
+    def pe_ids(self, super_width: int) -> np.ndarray:
+        """Super-mesh PE ids of the rectangle, in the sub-mesh's own
+        row-major order (index k is the sub-mesh's local PE k)."""
+        ox, oy = self.origin
+        w, h = self.geom
+        return (((oy + np.arange(h))[:, None] * super_width
+                 + ox + np.arange(w)[None, :]).ravel().astype(np.int64))
+
+
+@dataclasses.dataclass(frozen=True)
+class PackPlan:
+    """Where every input lane lives in the packed batch.
+
+    ``placements[i]`` is input lane ``i``'s rectangle; ``super_geoms[s]``
+    is output lane ``s``'s mesh (the shared packing mesh for co-tenanted
+    supers, a lane's own geometry for fallback solo lanes).
+    """
+
+    super_geoms: tuple[tuple[int, int], ...]
+    placements: tuple[SubLane, ...]
+
+    @property
+    def n_supers(self) -> int:
+        return len(self.super_geoms)
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.placements)
+
+    def lanes_of(self, super_lane: int) -> list[SubLane]:
+        return [p for p in self.placements if p.super_lane == super_lane]
+
+    def occupied_pes(self) -> int:
+        return sum(p.geom[0] * p.geom[1] for p in self.placements)
+
+    def efficiency(self) -> float:
+        """Occupied / padded PE fraction of the packed batch: every output
+        lane's PE axis pads to the batch maximum, so the denominator is
+        ``n_supers * max(super area)``.  1.0 = no dead PE rows stepped."""
+        n_max = max(w * h for (w, h) in self.super_geoms)
+        return self.occupied_pes() / float(self.n_supers * n_max)
+
+
+def unpacked_efficiency(geoms) -> float:
+    """Occupied/padded PE fraction of the plain (one lane per workload)
+    batch — the baseline :func:`PackPlan.efficiency` is gated against."""
+    areas = [int(w) * int(h) for (w, h) in geoms]
+    return sum(areas) / float(len(areas) * max(areas))
+
+
+def plan_packing(geoms, *, super_geom=None, groups=None) -> PackPlan:
+    """Deterministic 2-D shelf/guillotine packing of lane meshes.
+
+    Args:
+      geoms: sequence of per-lane ``(width, height)`` pairs.
+      super_geom: the shared packing mesh; defaults to
+        ``(max width, max height)`` over the lanes, so the largest lane
+        fits exactly and the padded PE axis never grows past what the
+        unpacked batch would have used.
+      groups: optional per-lane hashable keys; only lanes with equal keys
+        may share a super-lane (used to keep fabric modes per-lane:
+        co-tenants share the engine's per-lane mode word).
+
+    Placement is first-fit decreasing height onto shelves, with column
+    stacking inside each shelf (a short lane opens a column under the
+    shelf ceiling and later equally-narrow lanes stack into it — the
+    guillotine split that keeps e.g. two 2x2s inside a height-4 shelf).
+    Lanes wider or taller than ``super_geom`` fall back to a dedicated
+    super-lane of their own native geometry.  The plan is a pure function
+    of the arguments (stable sort, first fit): every lane is placed
+    exactly once and no two rectangles of a super-lane overlap
+    (tests/test_lane_packing.py holds these invariants under hypothesis).
+    """
+    geoms = [(int(w), int(h)) for (w, h) in geoms]
+    if not geoms:
+        raise ValueError("empty geometry list")
+    if super_geom is None:
+        super_geom = (max(w for w, _ in geoms), max(h for _, h in geoms))
+    sw, sh = int(super_geom[0]), int(super_geom[1])
+    if sw < 1 or sh < 1:
+        raise ValueError(f"bad super geometry {super_geom}")
+    group_list = [None] * len(geoms) if groups is None else list(groups)
+    if len(group_list) != len(geoms):
+        raise ValueError(f"{len(group_list)} groups for {len(geoms)} lanes")
+    # group rank by first appearance keeps the plan independent of key
+    # types (modes may be ints, names, None) yet fully deterministic.
+    rank: dict = {}
+    for g in group_list:
+        rank.setdefault(g, len(rank))
+
+    order = sorted(
+        range(len(geoms)),
+        key=lambda i: (rank[group_list[i]], -geoms[i][1], -geoms[i][0], i))
+
+    # super-lane build state: list of dicts
+    #   {group, shelves: [{y, h, x_used, cols: [{x, w, y_used}]}], y_used}
+    supers: list[dict] = []
+    super_geoms: list[tuple[int, int]] = []
+    placements: list[SubLane | None] = [None] * len(geoms)
+
+    def place(i: int, s: int, x: int, y: int) -> None:
+        placements[i] = SubLane(lane=i, super_lane=s, origin=(x, y),
+                                geom=geoms[i])
+
+    for i in order:
+        w, h = geoms[i]
+        if w < 1 or h < 1:
+            raise ValueError(f"lane {i}: bad geometry {(w, h)}")
+        if w > sw or h > sh:
+            # fallback: oversized lane gets its own super of native shape
+            super_geoms.append((w, h))
+            supers.append(dict(group=object(), shelves=[], y_used=sh + 1))
+            place(i, len(supers) - 1, 0, 0)
+            continue
+        done = False
+        for s, sup in enumerate(supers):
+            if sup["group"] != group_list[i]:
+                continue
+            for shelf in sup["shelves"]:
+                # stack into an existing column of sufficient width/room
+                for col in shelf["cols"]:
+                    if w <= col["w"] and col["y_used"] + h <= shelf["h"]:
+                        place(i, s, col["x"], shelf["y"] + col["y_used"])
+                        col["y_used"] += h
+                        done = True
+                        break
+                if done:
+                    break
+                # open a new column on this shelf
+                if h <= shelf["h"] and shelf["x_used"] + w <= sw:
+                    shelf["cols"].append(dict(x=shelf["x_used"], w=w,
+                                              y_used=h))
+                    place(i, s, shelf["x_used"], shelf["y"])
+                    shelf["x_used"] += w
+                    done = True
+                    break
+            if done:
+                break
+            # open a new shelf in this super
+            if sup["y_used"] + h <= sh:
+                shelf = dict(y=sup["y_used"], h=h, x_used=w,
+                             cols=[dict(x=0, w=w, y_used=h)])
+                sup["shelves"].append(shelf)
+                place(i, s, 0, sup["y_used"])
+                sup["y_used"] += h
+                done = True
+            if done:
+                break
+        if not done:
+            # open a new super-lane
+            super_geoms.append((sw, sh))
+            supers.append(dict(
+                group=group_list[i], y_used=h,
+                shelves=[dict(y=0, h=h, x_used=w,
+                              cols=[dict(x=0, w=w, y_used=h)])]))
+            place(i, len(supers) - 1, 0, 0)
+    return PackPlan(super_geoms=tuple(super_geoms),
+                    placements=tuple(placements))  # type: ignore[arg-type]
+
+
+def _rebase_into_super(wl, sub: SubLane, super_width: int, n_super: int,
+                       pc_off: int):
+    """Relocate one compiled workload into its sub-mesh rectangle.
+
+    Returns ``(static_ams, amq_len, mem_val, mem_meta)`` arrays on the
+    ``n_super``-PE axis with every PE reference remapped through the
+    rectangle's coordinate shift and every program counter offset by
+    ``pc_off`` (the sub-lane's slice of the concatenated super program).
+    """
+    ids = sub.pe_ids(super_width)                       # solo pe -> super pe
+    remap = np.asarray(ids, np.int32)
+    n_lane = remap.shape[0]
+    ams = np.array(wl.static_ams, np.int32, copy=True)
+    if ams.shape[0] != n_lane:
+        raise ValueError(
+            f"lane {sub.lane}: compiled for {ams.shape[0]} PEs but placed "
+            f"as a {sub.geom[0]}x{sub.geom[1]} sub-mesh ({n_lane} PEs)")
+    valid = ams[..., F_VALID] == 1
+    for f in (F_DST0, F_DST1, F_DST2):
+        d = ams[..., f]
+        if (valid & (d >= n_lane)).any():
+            raise ValueError(
+                f"lane {sub.lane}: AM destination PE id out of range "
+                f"(>= {n_lane}); workload inconsistent with its geometry")
+        ams[..., f] = np.where(valid & (d >= 0),
+                               remap[np.clip(d, 0, n_lane - 1)], d)
+    ams[..., F_PC] = np.where(valid, ams[..., F_PC] + pc_off,
+                              ams[..., F_PC])
+
+    q = ams.shape[1]
+    sup_ams = np.zeros((n_super, q, ams.shape[2]), np.int32)
+    sup_ams[ids] = ams
+    sup_alen = np.zeros((n_super,), np.int32)
+    sup_alen[ids] = np.asarray(wl.amq_len, np.int32)
+
+    m = wl.mem_val.shape[1]
+    sup_val = np.zeros((n_super, m), np.int32)
+    sup_val[ids] = np.asarray(wl.mem_val, np.int32)
+    meta = np.array(wl.mem_meta, np.int32, copy=True)
+    meta_pe = getattr(wl, "meta_pe", None)
+    if meta_pe is not None:
+        tgt = meta[..., 1]
+        meta[..., 1] = np.where(
+            np.asarray(meta_pe, bool),
+            remap[np.clip(tgt, 0, n_lane - 1)], tgt)
+    sup_meta = np.zeros((n_super, m, 2), np.int32)
+    sup_meta[ids] = meta
+    return sup_ams, sup_alen, sup_val, sup_meta
+
+
+def _lane_geoms(workloads) -> list[tuple[int, int]]:
+    """Per-lane (width, height) from compiled workloads; packing cannot
+    place a lane that does not know its mesh."""
+    geoms = []
+    for i, wl in enumerate(workloads):
+        g = getattr(wl, "geom", None)
+        if g is None:
+            raise ValueError(
+                f"lane {i} carries no geometry; packing needs compiled "
+                "workloads (repro.core.compiler records wl.geom)")
+        geoms.append((int(g[0]), int(g[1])))
+    return geoms
+
+
+def _resolve_modes(modes, n: int) -> list[int] | None:
+    if modes is None:
+        return None
+    from repro.core.machine import resolve_mode
+    out = [resolve_mode(m_) for m_ in modes]
+    if len(out) != n:
+        raise ValueError(f"{len(out)} modes for {n} workloads")
+    return out
+
+
+def pack_workloads(workloads, modes=None, *, super_geom=None
+                   ) -> BatchedWorkloads:
+    """Stack compiled workloads with sub-mesh lane packing.
+
+    Like :func:`stack_workloads`, but lanes are first bin-packed into
+    disjoint rectangles of shared super-lanes (:func:`plan_packing`), and
+    each workload's arrays are rebased into its rectangle
+    (:func:`_rebase_into_super`).  Programs of co-tenants are
+    concatenated with per-sub-lane PC offsets.  The result carries
+    ``sub_ids`` / ``local_ids`` per-PE vectors (the engine's sub-lane
+    accounting) and the :class:`PackPlan` (``plan``) used to un-pack
+    per-lane results back into input order.
+
+    ``modes`` (names/bitmasks, one per workload) both selects each lane's
+    fabric mode and constrains packing: only same-mode lanes co-tenant a
+    super-lane (the engine's mode word is per-lane).
+    """
+    wls = list(workloads)
+    if not wls:
+        raise ValueError("empty workload batch")
+    geoms = _lane_geoms(wls)
+    mode_list = _resolve_modes(modes, len(wls))
+    mode_arr = (None if mode_list is None
+                else np.asarray(mode_list, np.int32))
+
+    plan = plan_packing(geoms, super_geom=super_geom, groups=mode_list)
+
+    n_max = max(w * h for (w, h) in plan.super_geoms)
+    rows, sub_ids, local_ids, super_modes = [], [], [], []
+    for s, (sw, sh) in enumerate(plan.super_geoms):
+        subs = plan.lanes_of(s)
+        n_super = sw * sh
+        # concatenated super program: each sub-lane's rows at its offset
+        pc_offs, p_total = [], 0
+        for sub in subs:
+            pc_offs.append(p_total)
+            p_total += wls[sub.lane].prog.shape[0]
+        prog = np.zeros((max(p_total, 1), wls[subs[0].lane].prog.shape[1]),
+                        np.int32)
+        sid = np.zeros((n_max,), np.int32)
+        lid = np.zeros((n_max,), np.int32)
+        parts = []
+        for k, (sub, off) in enumerate(zip(subs, pc_offs)):
+            wl = wls[sub.lane]
+            p = np.array(wl.prog, np.int32, copy=True)
+            p[:, C_NEXT_PC] += off
+            prog[off:off + p.shape[0]] = p
+            parts.append(_rebase_into_super(wl, sub, sw, n_super, off))
+            ids = sub.pe_ids(sw)
+            sid[ids] = k
+            lid[ids] = np.arange(ids.shape[0], dtype=np.int32)
+        if mode_arr is not None:
+            # co-tenants were grouped by mode, so one word covers them all
+            super_modes.append(int(mode_arr[subs[0].lane]))
+        q = max(a.shape[1] for a, _, _, _ in parts)
+        m = max(v.shape[1] for _, _, v, _ in parts)
+        ams = np.zeros((n_super, q, parts[0][0].shape[2]), np.int32)
+        alen = np.zeros((n_super,), np.int32)
+        val = np.zeros((n_super, m), np.int32)
+        meta = np.zeros((n_super, m, 2), np.int32)
+        for a, al, v, mt in parts:
+            ams[:, :a.shape[1]] += a
+            alen += al
+            val[:, :v.shape[1]] += v
+            meta[:, :mt.shape[1]] += mt
+        rows.append((prog, ams, alen, val, meta))
+        sub_ids.append(sid)
+        local_ids.append(lid)
+
+    stacked = stack_workloads(
+        rows, geoms=list(plan.super_geoms))
+    return dataclasses.replace(
+        stacked,
+        modes=(np.asarray(super_modes, np.int32)
+               if mode_arr is not None else None),
+        sub_ids=np.stack(sub_ids),
+        local_ids=np.stack(local_ids),
+        plan=plan,
+    )
+
+
+def plan_waves(geoms, *, super_geom=None, groups=None) -> list[list[int]]:
+    """Partition lanes into co-scheduling *waves* (device-call batches).
+
+    Each wave holds at most ONE super-lane per group and is packed tight
+    by :func:`plan_packing`; waves run sequentially on the same compiled
+    engine.  Rationale: the padded engine steps ``B x N_max`` PE rows per
+    cycle whether they carry work or not, so the total run cost is
+    ``sum over waves of makespan x supers``.  Lanes with similar runtimes
+    should share a wave; lanes with dissimilar runtimes should serialize
+    (a short lane in a long wave steps dead rows for the difference).
+    With no runtime oracle, mesh area is the proxy the Fig. 17 regime
+    justifies: the same problem on a smaller mesh runs longer, and
+    same-size lanes run comparably.  Lanes are therefore taken area-
+    ascending (longest first) and first-fit into the earliest wave whose
+    super still has room.
+
+    Returns the list of waves, each a list of lane indices (every lane in
+    exactly one wave).
+    """
+    geoms = [(int(w), int(h)) for (w, h) in geoms]
+    if super_geom is None:
+        super_geom = (max(w for w, _ in geoms), max(h for _, h in geoms))
+    group_list = [None] * len(geoms) if groups is None else list(groups)
+    if len(set(geoms)) == 1:
+        # Homogeneous batch (every lane the same mesh): the area proxy
+        # has no relative-runtime signal at all, and serializing gains
+        # nothing in PE rows while paying per-wave overhead — so packing
+        # degrades to the identity plan: ONE wave, every lane its own
+        # (co-tenanted where possible) super-lane, i.e. the plain
+        # batched call.  In MIXED batches, by contrast, full-mesh lanes
+        # deliberately serialize even against each other: same-area
+        # different-workload lanes routinely differ 10-30x in cycles
+        # (fig17's three 8x8 lanes: 2565/798/86), and one slow lane in a
+        # parallel-super wave makes every co-scheduled super step its
+        # makespan.
+        return [list(range(len(geoms)))]
+    order = sorted(range(len(geoms)),
+                   key=lambda i: (geoms[i][0] * geoms[i][1], i))
+    waves: list[list[int]] = []
+    for i in order:
+        placed = False
+        for wave in waves:
+            cand = wave + [i]
+            plan = plan_packing([geoms[j] for j in cand],
+                                super_geom=super_geom,
+                                groups=[group_list[j] for j in cand])
+            if plan.n_supers == len({group_list[j] for j in cand}) and \
+                    all(g == tuple(super_geom) for g in plan.super_geoms):
+                wave.append(i)
+                placed = True
+                break
+        if not placed:
+            waves.append([i])
+    return waves
+
+
+def _pad_batch(wb: BatchedWorkloads, p: int, q: int, m: int, n: int,
+               b: int) -> BatchedWorkloads:
+    """Pad one wave's batch to the schedule-wide shapes (so every wave
+    reuses ONE compiled engine specialization): program rows to ``p``, AM
+    queue depth to ``q``, memory words to ``m``, PE axis to ``n``, and the
+    lane axis to ``b`` with inert dummy lanes (a 1x1 mesh with an empty
+    workload is idle at cycle 0)."""
+    grow = b - wb.batch
+    prog = pad_axis(pad_axis(wb.prog, p, 1), b, 0)
+    static_ams = pad_axis(pad_axis(pad_axis(wb.static_ams, q, 2), n, 1), b, 0)
+    amq_len = pad_axis(pad_axis(wb.amq_len, n, 1), b, 0)
+    mem_val = pad_axis(pad_axis(pad_axis(wb.mem_val, m, 2), n, 1), b, 0)
+    mem_meta = pad_axis(pad_axis(pad_axis(wb.mem_meta, m, 2), n, 1), b, 0)
+    geoms = wb.geoms
+    if geoms is not None and grow:
+        geoms = np.concatenate(
+            [geoms, np.ones((grow, 2), np.int32)])
+    modes = wb.modes
+    if modes is not None and grow:
+        modes = np.concatenate([modes, np.zeros((grow,), np.int32)])
+    sub_ids = (pad_axis(pad_axis(wb.sub_ids, n, 1), b, 0)
+               if wb.sub_ids is not None else None)
+    local_ids = (pad_axis(pad_axis(wb.local_ids, n, 1), b, 0)
+                 if wb.local_ids is not None else None)
+    return dataclasses.replace(
+        wb, prog=prog, static_ams=static_ams, amq_len=amq_len,
+        mem_val=mem_val, mem_meta=mem_meta, geoms=geoms, modes=modes,
+        sub_ids=sub_ids, local_ids=local_ids)
+
+
+def pack_schedule(workloads, modes=None, *, super_geom=None):
+    """Plan + pack the full co-schedule for ``run_many(pack=True)``.
+
+    Returns ``(batches, lane_maps, stats)``: one packed
+    :class:`BatchedWorkloads` per wave (all padded to identical shapes,
+    so the whole schedule shares one compiled engine), the input-lane
+    indices behind each wave's plan entries, and a ``stats`` dict
+    (``n_waves`` / ``n_super_lanes`` / ``packing_efficiency`` /
+    ``unpacked_efficiency``).  ``packing_efficiency`` is the occupied
+    fraction of all PE rows the schedule steps (1.0 = no dead rows);
+    ``unpacked_efficiency`` is the same figure for the plain one-lane-
+    per-workload batch the packer replaces.
+    """
+    wls = list(workloads)
+    geoms = _lane_geoms(wls)
+    mode_list = _resolve_modes(modes, len(wls))
+    if super_geom is None:
+        super_geom = (max(w for w, _ in geoms), max(h for _, h in geoms))
+    waves = plan_waves(geoms, super_geom=super_geom, groups=mode_list)
+    batches = [
+        pack_workloads([wls[i] for i in wave],
+                       modes=None if mode_list is None
+                       else [mode_list[i] for i in wave],
+                       super_geom=super_geom)
+        for wave in waves
+    ]
+    p = max(wb.prog.shape[1] for wb in batches)
+    q = max(wb.static_ams.shape[2] for wb in batches)
+    m = max(wb.mem_words for wb in batches)
+    n = max(wb.n_pes for wb in batches)
+    b = max(wb.batch for wb in batches)
+    batches = [_pad_batch(wb, p, q, m, n, b) for wb in batches]
+    occupied = sum(w_ * h_ for (w_, h_) in geoms)
+    stats = dict(
+        n_waves=len(waves),
+        n_super_lanes=len(batches) * b,
+        packing_efficiency=occupied / float(len(batches) * b * n),
+        unpacked_efficiency=unpacked_efficiency(geoms),
+        plan=[  # JSON-serializable schedule description (for logs)
+            dict(super_geom=list(super_geom),
+                 lanes=[dict(lane=int(wave[p.lane]),
+                             super_lane=int(p.super_lane),
+                             origin=list(p.origin), geom=list(p.geom))
+                        for p in wb.plan.placements])
+            for wb, wave in zip(batches, waves)
+        ],
+    )
+    return batches, waves, stats

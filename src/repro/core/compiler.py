@@ -83,6 +83,12 @@ class CompiledWorkload:
     # the workload into mixed-size run_many batches (see
     # repro.core.batch.stack_workloads).
     geom: tuple[int, int] | None = None
+    # (N, MEM) bool: True where mem_meta[..., 1] holds a PE id (stream /
+    # continuation destinations).  Sub-mesh lane packing rebases exactly
+    # these words when it relocates the workload inside a larger fabric
+    # (see repro.core.batch.pack_workloads); addresses and values (and
+    # mem_meta[..., 0], which is always a count/address/value) never move.
+    meta_pe: np.ndarray | None = None
 
     def check(self, mem_val: np.ndarray) -> bool:
         return bool(np.array_equal(self.read_result(mem_val), self.expected))
@@ -96,8 +102,15 @@ class _Builder:
         n = cfg.n_pes
         self.mem_val = np.zeros((n, cfg.mem_words), dtype=np.int32)
         self.mem_meta = np.zeros((n, cfg.mem_words, 2), dtype=np.int32)
+        self.meta_pe = np.zeros((n, cfg.mem_words), dtype=bool)
         self.top = np.zeros((n,), dtype=np.int64)
         self.ams: list[list[np.ndarray]] = [[] for _ in range(n)]
+
+    def set_meta_pe(self, pe: int, addr: int, target_pe: int) -> None:
+        """Write a PE id into mem_meta[..., 1] and record that the word
+        holds one (lane packing must rebase it)."""
+        self.mem_meta[pe, addr, 1] = int(target_pe)
+        self.meta_pe[pe, addr] = True
 
     def alloc(self, pe: int, nwords: int) -> int:
         base = int(self.top[pe])
@@ -133,7 +146,7 @@ class _Builder:
             prog=prog, static_ams=sams, amq_len=alen, mem_val=self.mem_val,
             mem_meta=self.mem_meta, read_result=read_result,
             expected=expected, n_static_ams=total, name=name,
-            geom=(self.cfg.width, self.cfg.height))
+            geom=(self.cfg.width, self.cfg.height), meta_pe=self.meta_pe)
 
 
 def _place_rows(rowptr, col, n_pes, strategy, n_cols):
@@ -351,7 +364,7 @@ def build_sddmm(a: np.ndarray, b: np.ndarray, mask: np.ndarray,
         for kk in range(k):
             bld.mem_val[pe, d + 1 + kk] = int(a[i, kk])
             bld.mem_meta[pe, d + 1 + kk, 0] = int(b_base[kk])   # B row base
-            bld.mem_meta[pe, d + 1 + kk, 1] = int(b_pe[kk])     # B row owner
+            bld.set_meta_pe(pe, d + 1 + kk, int(b_pe[kk]))      # B row owner
 
     # outputs: one word per mask nonzero, aligned with A rows
     mask_rp, mask_col, _ = csr_from_dense(mask.astype(np.int64))
@@ -420,7 +433,7 @@ def _graph_layout(adj_rp, adj_col, weights, cfg, init_word,
             w = int(adj_col[e])
             bld.mem_val[pe, d + 1 + t] = int(weights[e])
             bld.mem_meta[pe, d + 1 + t, 0] = 0  # filled below (state addr)
-            bld.mem_meta[pe, d + 1 + t, 1] = int(v_pe[w])
+            bld.set_meta_pe(pe, d + 1 + t, int(v_pe[w]))
     # second pass: element meta0 = state addr of the edge target
     for v in range(nv):
         pe = int(v_pe[v])
@@ -433,7 +446,7 @@ def _graph_layout(adj_rp, adj_col, weights, cfg, init_word,
     for v in range(nv):
         pe = int(v_pe[v])
         bld.mem_meta[pe, state_addr[v], 0] = int(desc_addr[v])
-        bld.mem_meta[pe, state_addr[v], 1] = pe
+        bld.set_meta_pe(pe, int(state_addr[v]), pe)
     return bld, v_pe, state_addr, desc_addr
 
 

@@ -60,6 +60,23 @@ results — so a padded lane is bit-identical to its solo run on the native
 mesh.  One compiled engine (keyed on ``N_max``, not on width/height)
 therefore serves every (workload x mode x size) sweep point.
 
+Sub-mesh lane packing (co-scheduling small meshes)
+---------------------------------------------------
+Padding every lane to the batch-wide ``N_max`` makes small lanes step
+dead PE rows.  ``run_many(..., pack=True)`` co-schedules several small
+lanes as *disjoint rectangular sub-meshes of one padded super-lane*
+(:mod:`repro.core.batch`): west-first minimal routing never leaves the
+src->dst bounding box, so rectangles are isolated by construction and
+the engine only needs per-sub-lane *accounting* — the per-PE ``sub_ids``
+vector groups PEs into sub-lanes whose cycle counters and statistics
+freeze independently at each sub-lane's own idle point
+(:func:`group_idle`), and ``local_ids`` keys the Valiant waypoint hash
+on sub-mesh-local PE ids so a relocated lane draws its solo waypoint
+sequence.  Dissimilar-runtime lanes are serialized into waves
+(:func:`repro.core.batch.plan_waves`) that reuse the ONE compiled
+engine; packed per-lane metrics are bit-identical to solo runs
+(tests/test_lane_packing.py).
+
 What stays *static* (compile-time) in :class:`MachineConfig`: the padded
 PE-axis length, memory and queue capacities
 (``mem_words``/``queue_cap``/``stream_wait_cap``), and ``max_cycles`` —
@@ -235,14 +252,17 @@ class MachineState(NamedTuple):
     swq_h: jnp.ndarray      # (N,) circular-buffer head (oldest entry)
     swq_n: jnp.ndarray      # (N,)
     rr: jnp.ndarray         # (N,) round-robin priority pointer
-    cycle: jnp.ndarray      # () cycle counter
-    # --- statistics -------------------------------------------------------
+    cycle: jnp.ndarray      # (N,) per-PE cycle counter.  All PEs of one
+    #   sub-lane advance in lockstep until their sub-lane idles, then
+    #   freeze — so under sub-mesh packing each co-tenant keeps its own
+    #   cycle count (solo lanes: one sub-lane = a uniform vector).
+    # --- statistics (per-PE so packed sub-lanes account separately) -------
     st_busy: jnp.ndarray       # (N,) cycles each PE executed/streamed
-    st_exec: jnp.ndarray       # () total instructions executed
-    st_enroute: jnp.ndarray    # () executed opportunistically en route
+    st_exec: jnp.ndarray       # (N,) instructions executed per PE
+    st_enroute: jnp.ndarray    # (N,) executed opportunistically en route
     st_stall: jnp.ndarray      # (N, 5) head-of-line stall cycles per port
-    st_hops: jnp.ndarray       # () total link traversals
-    st_inj: jnp.ndarray        # () messages injected
+    st_hops: jnp.ndarray       # (N,) link traversals (sender-attributed)
+    st_inj: jnp.ndarray        # (N,) messages injected
 
 
 def init_state(cfg: MachineConfig,
@@ -282,13 +302,13 @@ def init_state(cfg: MachineConfig,
         swq_h=z((n,), jnp.int32),
         swq_n=z((n,), jnp.int32),
         rr=z((n,), jnp.int32),
-        cycle=jnp.int32(0),
+        cycle=z((n,), jnp.int32),
         st_busy=z((n,), jnp.int32),
-        st_exec=jnp.int32(0),
-        st_enroute=jnp.int32(0),
+        st_exec=z((n,), jnp.int32),
+        st_enroute=z((n,), jnp.int32),
         st_stall=z((n, PORTS), jnp.int32),
-        st_hops=jnp.int32(0),
-        st_inj=jnp.int32(0),
+        st_hops=z((n,), jnp.int32),
+        st_inj=z((n,), jnp.int32),
     )
 
 
@@ -354,17 +374,22 @@ def _anchor_tia(nxt: jnp.ndarray, pe_ids: jnp.ndarray) -> jnp.ndarray:
 def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
     """Build the program-, mode- and geometry-parametric cycle transition.
 
-    Returns ``cycle(prog_j, mode, geom, st) -> st`` where ``prog_j`` is the
-    replicated configuration memory as a *traced* ``(P, CFG_F)`` array,
-    ``mode`` a *traced* int32 mode bitmask (see :data:`FABRIC_MODES`) and
-    ``geom`` a *traced* ``(2,)`` int32 ``(width, height)`` vector.  Keeping
-    the program, the execution mode and the mesh geometry out of the trace
-    constants means one compiled engine serves every (workload x mode x
-    size) point with the same shapes — the sweep compile cache in
-    :func:`run_many` relies on this.  With ``cfg.traced_modes=False`` /
-    ``cfg.traced_geometry=False`` the corresponding argument is ignored
-    and the config's flags / mesh are baked in as Python constants (the
-    golden static paths).
+    Returns ``cycle(prog_j, mode, geom, st, local_ids=None) -> st`` where
+    ``prog_j`` is the replicated configuration memory as a *traced*
+    ``(P, CFG_F)`` array, ``mode`` a *traced* int32 mode bitmask (see
+    :data:`FABRIC_MODES`) and ``geom`` a *traced* ``(2,)`` int32
+    ``(width, height)`` vector.  Keeping the program, the execution mode
+    and the mesh geometry out of the trace constants means one compiled
+    engine serves every (workload x mode x size) point with the same
+    shapes — the sweep compile cache in :func:`run_many` relies on this.
+    With ``cfg.traced_modes=False`` / ``cfg.traced_geometry=False`` the
+    corresponding argument is ignored and the config's flags / mesh are
+    baked in as Python constants (the golden static paths).
+
+    ``local_ids`` is the per-PE id *within its own sub-mesh* (defaults to
+    the global PE index).  It only feeds the Valiant waypoint hash: under
+    sub-mesh lane packing a relocated lane must draw the same waypoint
+    sequence it would solo, so the hash keys on the sub-mesh-local id.
 
     ``n_pes`` is the PE-axis *array length* (>= the largest lane's
     width*height under traced geometry; must equal ``cfg.n_pes`` on the
@@ -413,7 +438,9 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
         return port.astype(jnp.int32)
 
     def cycle(prog_j: jnp.ndarray, mode: jnp.ndarray, geom: jnp.ndarray,
-              st: MachineState) -> MachineState:
+              st: MachineState,
+              local_ids: jnp.ndarray | None = None) -> MachineState:
+        sub_local = pe_ids if local_ids is None else local_ids
         if cfg.traced_geometry:
             # Traced mesh: coordinates, neighbor indices and the active-PE
             # mask are recomputed from the (width, height) vector each
@@ -859,7 +886,7 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
             # src→dst bounding box, so each leg keeps the same per-axis
             # direction signs and the west-first turn model stays
             # deadlock-free.  Anchored (-2)/self messages are exempt.
-            h = (pe_ids.astype(jnp.uint32) * jnp.uint32(2654435761)
+            h = (sub_local.astype(jnp.uint32) * jnp.uint32(2654435761)
                  + st.cycle.astype(jnp.uint32) * jnp.uint32(40503))
             dstp = jnp.clip(inj_msg[:, F_DST0], 0)
             dx = dstp % w - xs
@@ -895,13 +922,17 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
         amq_head = st.amq_head + inj_stat.astype(jnp.int32)
 
         # ==================== STATS =========================================
+        # All per-PE: totals are reductions at result-extraction time, and
+        # under sub-mesh packing each co-tenant's slice freezes at its own
+        # idle point (hops are attributed to the sending PE — a hop's two
+        # endpoints always belong to the same sub-mesh).
         busy = mv | mv_alu | can_emit
         st_busy = st.st_busy + busy.astype(jnp.int32)
-        st_exec = st.st_exec + (mv.sum() + mv_alu.sum()).astype(jnp.int32)
-        st_enroute = st.st_enroute + sel_icept.any(axis=1).sum().astype(jnp.int32)
+        st_exec = st.st_exec + mv.astype(jnp.int32) + mv_alu.astype(jnp.int32)
+        st_enroute = st.st_enroute + sel_icept.any(axis=1).astype(jnp.int32)
         st_stall = st.st_stall + (stall_net | stall_local).astype(jnp.int32)
-        st_hops = st.st_hops + grants.sum().astype(jnp.int32)
-        st_inj = st.st_inj + do_inj.sum().astype(jnp.int32)
+        st_hops = st.st_hops + grants.sum(axis=1).astype(jnp.int32)
+        st_inj = st.st_inj + do_inj.astype(jnp.int32)
 
         return MachineState(
             buf=buf, buf_n=buf_n, amq=st.amq, amq_head=amq_head,
@@ -935,6 +966,30 @@ def is_idle(st: MachineState, active: jnp.ndarray | None = None
             & (~(st.stream_on & a).any())
             & ((st.swq_n * a).sum() == 0)
             & ((st.amq_head >= st.amq_len) | ~a).all())
+
+
+def lane_work(st: MachineState) -> jnp.ndarray:
+    """(N,) outstanding-work count per PE: buffered flits + pending
+    outputs + queued/active streams + un-injected static AMs.  A PE with
+    zero work is idle; a *sub-lane* is idle when every PE of its group is
+    (the per-PE decomposition of :func:`is_idle` — inactive padded PEs
+    hold all-zero state, so no mask is needed)."""
+    return (st.buf_n.sum(axis=1) + st.pend_n + st.swq_n
+            + st.stream_on.astype(jnp.int32)
+            + (st.amq_head < st.amq_len).astype(jnp.int32))
+
+
+def group_idle(st: MachineState, sub_ids: jnp.ndarray) -> jnp.ndarray:
+    """(N,) bool: True where the PE's own sub-lane has no work anywhere.
+
+    ``sub_ids`` assigns each PE a sub-lane slot (all-zero for unpacked
+    lanes, where this reduces to the global idle test broadcast).  Each
+    PE then freezes its cycle counter and statistics exactly when its own
+    sub-lane idles — co-tenants of a packed super-lane keep stepping.
+    """
+    n = sub_ids.shape[0]
+    gw = jax.ops.segment_sum(lane_work(st), sub_ids, num_segments=n)
+    return (gw == 0)[sub_ids]
 
 
 @dataclasses.dataclass
@@ -1021,19 +1076,25 @@ def engine_cache_size() -> int:
 
 
 def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None):
-    """Batched runner ``engine(prog, modes, geoms, st) -> (st, overflowed,
-    idle)``.
+    """Batched runner ``engine(prog, modes, geoms, sub_ids, local_ids, st)
+    -> (st, overflowed, idle)``.
 
     ``prog`` is (B, P, CFG_F), ``modes`` a (B,) int32 per-lane mode bitmask
     (ignored by static-mode engines), ``geoms`` a (B, 2) int32 per-lane
-    ``(width, height)`` vector (ignored by static-geometry engines) and
+    ``(width, height)`` vector (ignored by static-geometry engines),
+    ``sub_ids`` / ``local_ids`` (B, N) int32 per-PE sub-lane slot ids and
+    sub-mesh-local PE ids (all-zero / arange for unpacked lanes) and
     ``st`` a MachineState whose leaves carry a leading batch dimension with
     PE axes of length ``n_max``.  The whole run happens in ONE device
     call: a ``lax.while_loop`` over jitted chunks of ``chunk`` cycles,
     terminating when every lane is idle (or capped, or a lane trips the
-    pending-FIFO guard).  A lane that reaches idle freezes — its cycle
-    counter and stats stop advancing — so per-lane metrics match a solo
-    :func:`run` exactly.
+    pending-FIFO guard).  Freezing is per *sub-lane*: a sub-lane (the
+    whole lane, when unpacked) that reaches idle stops advancing its PEs'
+    cycle counters and stats while co-tenant sub-meshes keep stepping —
+    so per-(sub-)lane metrics match a solo :func:`run` exactly.
+
+    ``idle`` is returned per-PE ((B, N) bool, uniform within a sub-lane):
+    callers read a sub-lane's completion off any of its PEs.
     """
     n_max = cfg.n_pes if n_max is None else int(n_max)
     key = _engine_key(cfg, n_max, chunk)
@@ -1042,102 +1103,112 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None):
         return eng
     cyc = _make_cycle(cfg, n_max)
 
-    def lane_active_pes(geom):
-        # (N,) bool mask of real PEs for one lane, or None when the mesh
-        # is baked into the trace (every PE is real).
-        if not cfg.traced_geometry:
-            return None
-        return jnp.arange(n_max, dtype=jnp.int32) < geom[0] * geom[1]
-
-    def lane_step(prog, mode, geom, st):
-        # Step unconditionally — on an idle lane the transition is a natural
-        # no-op for every state array (idle is absorbing: nothing buffered,
-        # queued, streaming, or left to inject) — and freeze only the cycle
-        # counter and statistics of inactive lanes.  A per-lane lax.cond
-        # would lower to a select over EVERY leaf under vmap, copying the
-        # multi-MB queue arrays each cycle; masking the cheap observable
-        # leaves keeps per-cycle cost independent of queue capacities.
-        active = (~is_idle(st, lane_active_pes(geom))) & \
-            (st.cycle < cfg.max_cycles)
-        st2 = cyc(prog, mode, geom, st)
+    def lane_step(prog, mode, geom, sub_id, local_id, st):
+        # Step unconditionally — on an idle sub-lane the transition is a
+        # natural no-op for every state array (idle is absorbing: nothing
+        # buffered, queued, streaming, or left to inject) — and freeze
+        # only the cycle counters and statistics of idle sub-lanes'
+        # PEs.  A per-lane lax.cond would lower to a select over EVERY
+        # leaf under vmap, copying the multi-MB queue arrays each cycle;
+        # masking the cheap observable leaves keeps per-cycle cost
+        # independent of queue capacities.
+        alive = (~group_idle(st, sub_id)) & (st.cycle < cfg.max_cycles)
+        st2 = cyc(prog, mode, geom, st, local_id)
 
         def keep(new, old):
-            return jnp.where(active, new, old)
+            return jnp.where(alive, new, old)
 
         return st2._replace(
             cycle=keep(st2.cycle, st.cycle),
             st_busy=keep(st2.st_busy, st.st_busy),
             st_exec=keep(st2.st_exec, st.st_exec),
             st_enroute=keep(st2.st_enroute, st.st_enroute),
-            st_stall=keep(st2.st_stall, st.st_stall),
+            st_stall=jnp.where(alive[:, None], st2.st_stall, st.st_stall),
             st_hops=keep(st2.st_hops, st.st_hops),
             st_inj=keep(st2.st_inj, st.st_inj),
         )
 
-    step = jax.vmap(lane_step, in_axes=(0, 0, 0, 0))
-    batch_idle = jax.vmap(lambda geom, s: is_idle(s, lane_active_pes(geom)))
+    step = jax.vmap(lane_step, in_axes=(0, 0, 0, 0, 0, 0))
+    batch_idle = jax.vmap(lambda sub_id, s: group_idle(s, sub_id))
 
-    @functools.partial(jax.jit, donate_argnums=3)
-    def engine(prog, modes, geoms, st):
+    @functools.partial(jax.jit, donate_argnums=5)
+    def engine(prog, modes, geoms, sub_ids, local_ids, st):
         def cond(carry):
             s, over = carry
-            live = ~batch_idle(geoms, s) & (s.cycle < cfg.max_cycles)
+            # a lane is live while any of its PEs still advances: its
+            # sub-lane has work left and its cycle counter is below the
+            # cap.  (A capped-but-busy sub-lane no longer keeps the lane
+            # live — its co-tenants' own counters reach the cap too.)
+            live = (~batch_idle(sub_ids, s)) & (s.cycle < cfg.max_cycles)
             return live.any() & ~over.any()
 
         def body(carry):
             s, over = carry
             def sub(s, _):
-                return step(prog, modes, geoms, s), ()
+                return step(prog, modes, geoms, sub_ids, local_ids, s), ()
             s, _ = jax.lax.scan(sub, s, None, length=chunk)
             # pending-FIFO high-water check at chunk granularity (the
-            # consumption-guarantee invariant, see PEND_CAP above).  Lanes
+            # consumption-guarantee invariant, see PEND_CAP above).  PEs
             # already frozen at max_cycles are exempt: they keep being
-            # stepped while other lanes run (their non-stat state is
+            # stepped while other (sub-)lanes run (their non-stat state is
             # undefined once completed=False), and their churn must not
             # abort the healthy lanes.
-            high = jnp.max(s.pend_n, axis=1) >= PEND_CAP - 2
-            over = over | (high & (s.cycle < cfg.max_cycles))
+            high = (s.pend_n >= PEND_CAP - 2) & (s.cycle < cfg.max_cycles)
+            over = over | high.any(axis=1)
             return s, over
 
-        over0 = jnp.zeros(st.cycle.shape, jnp.bool_)
+        over0 = jnp.zeros((st.cycle.shape[0],), jnp.bool_)
         st, over = jax.lax.while_loop(cond, body, (st, over0))
-        return st, over, batch_idle(geoms, st)
+        return st, over, batch_idle(sub_ids, st)
 
     _ENGINE_CACHE[key] = engine
     return engine
 
 
-def _lane_result(cfg: MachineConfig, st: MachineState, done: bool,
-                 b: int, n_lane: int | None = None) -> RunResult:
-    """Extract one lane's metrics, restricted to its *logical* mesh.
+def _pe_slice_result(st_host: dict, done: bool, b: int,
+                     ids: np.ndarray) -> RunResult:
+    """Metrics of the PE set ``ids`` of batch lane ``b`` (host arrays).
 
-    ``n_lane`` is the lane's width*height; PE-indexed arrays (busy, stall,
-    mem_val) are sliced to it so a geometry-padded lane reports exactly
-    what its solo run on the native mesh would.
+    ``ids`` lists the PEs in the (sub-)lane's own row-major order, so a
+    packed sub-mesh reports arrays laid out exactly like its solo run.
+    Every statistic is per-PE in ``MachineState``; totals are reductions
+    over the slice.
     """
-    cycles = int(np.asarray(st.cycle[b]))
-    n = cfg.n_pes if n_lane is None else int(n_lane)
-    per_pe_busy = np.asarray(st.st_busy[b])[:n]
-    executed = int(np.asarray(st.st_exec[b]))
-    enroute = int(np.asarray(st.st_enroute[b]))
+    n = ids.shape[0]
+    cycles = int(st_host["cycle"][b][ids].max())
+    per_pe_busy = st_host["st_busy"][b][ids]
+    executed = int(st_host["st_exec"][b][ids].sum())
+    enroute = int(st_host["st_enroute"][b][ids].sum())
     return RunResult(
         cycles=cycles,
-        mem_val=np.asarray(st.mem_val[b])[:n],
+        mem_val=st_host["mem_val"][b][ids],
         utilization=executed / max(1, cycles * n),
         busy_frac=float(per_pe_busy.sum()) / max(1, cycles * n),
         per_pe_busy=per_pe_busy,
         executed=executed,
         enroute=enroute,
         enroute_frac=enroute / max(1, executed),
-        hops=int(np.asarray(st.st_hops[b])),
-        injected=int(np.asarray(st.st_inj[b])),
-        stall_per_port=np.asarray(st.st_stall[b])[:n],
+        hops=int(st_host["st_hops"][b][ids].sum()),
+        injected=int(st_host["st_inj"][b][ids].sum()),
+        stall_per_port=st_host["st_stall"][b][ids],
         completed=done,
     )
 
 
+def _host_stats(st: MachineState) -> dict:
+    """Pull the result-bearing state leaves to host numpy once."""
+    return dict(
+        cycle=np.asarray(st.cycle), st_busy=np.asarray(st.st_busy),
+        st_exec=np.asarray(st.st_exec), st_enroute=np.asarray(st.st_enroute),
+        st_hops=np.asarray(st.st_hops), st_inj=np.asarray(st.st_inj),
+        st_stall=np.asarray(st.st_stall), mem_val=np.asarray(st.mem_val),
+    )
+
+
 def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
-             chunk: int = 512) -> list[RunResult]:
+             chunk: int = 512, pack: bool = False,
+             super_geom=None, pack_stats: dict | None = None
+             ) -> list[RunResult]:
     """Simulate B workloads in a single batched on-device run.
 
     Args:
@@ -1161,6 +1232,21 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
         Mixing sizes in one batch requires ``cfg.traced_geometry`` (the
         default); all PE axes are padded to the batch maximum and the
         whole (workload x mode x size) grid shares one compiled engine.
+      pack: co-schedule small lanes as disjoint sub-meshes of shared
+        super-lanes (:func:`repro.core.batch.pack_schedule`) so the
+        padded PE axis carries useful work instead of dead rows.  The
+        schedule may split the batch into a few sequential *waves*
+        (similar-runtime lanes share a wave; every wave reuses the same
+        compiled engine).  Needs compiled workloads (each records its
+        mesh) and the traced engine axes; results still come back one
+        per input workload, in input order, bit-identical to their solo
+        runs.
+      super_geom: optional ``(width, height)`` of the packing mesh
+        (default: the batch's maximum lane width x maximum lane height).
+        Only meaningful with ``pack=True``.
+      pack_stats: optional dict that ``pack=True`` fills with the
+        schedule's ``n_waves`` / ``n_super_lanes`` /
+        ``packing_efficiency`` / ``unpacked_efficiency``.
 
     Returns:
       One :class:`RunResult` per lane, in input order — metrics are exactly
@@ -1174,7 +1260,44 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
       RuntimeError: if any lane trips the pending-FIFO overflow guard
         (the consumption-guarantee invariant).
     """
-    from repro.core.batch import BatchedWorkloads, stack_workloads
+    from repro.core.batch import (BatchedWorkloads, pack_schedule,
+                                  stack_workloads)
+    if pack:
+        if isinstance(workloads, BatchedWorkloads):
+            raise ValueError(
+                "pack=True needs the raw sequence of compiled workloads; "
+                "this batch is already stacked (packing re-bases lanes "
+                "into super-meshes, which stacking discards)")
+        if not (cfg.traced_geometry and cfg.traced_modes):
+            raise ValueError("pack=True requires the traced engine axes "
+                             "(cfg.traced_geometry and cfg.traced_modes)")
+        if geoms is not None:
+            raise ValueError("pack=True places lanes itself; per-lane "
+                             "geoms cannot be overridden")
+        wls = list(workloads)
+        batches, waves, stats = pack_schedule(wls, modes=modes,
+                                              super_geom=super_geom)
+        if pack_stats is not None:
+            pack_stats.update(stats)
+        results: list = [None] * len(wls)
+        for wb, wave in zip(batches, waves):
+            try:
+                wave_res = run_many(cfg, wb, chunk=chunk)
+            except RuntimeError as e:
+                supers = getattr(e, "lanes", None)
+                if supers is None:
+                    raise
+                # translate the failing super-lanes into input workloads
+                culprits = sorted(
+                    wave[p.lane] for p in wb.plan.placements
+                    if p.super_lane in supers)
+                raise RuntimeError(
+                    "pending-FIFO overflow: consumption guarantee "
+                    "violated (simulator invariant; packed input lanes "
+                    f"{culprits})") from e
+            for i, r in zip(wave, wave_res):
+                results[i] = r
+        return results
     if not isinstance(workloads, BatchedWorkloads):
         workloads = stack_workloads(workloads, geoms=geoms)
         geoms = None        # now carried on the batch
@@ -1224,6 +1347,14 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
                          "require cfg.traced_modes=True (static engines "
                          "bake the mode into the trace)")
 
+    if workloads.sub_ids is not None:
+        sub_ids = np.asarray(workloads.sub_ids, np.int32)
+        local_ids = np.asarray(workloads.local_ids, np.int32)
+    else:
+        sub_ids = np.zeros((workloads.batch, n_max), np.int32)
+        local_ids = np.tile(np.arange(n_max, dtype=np.int32),
+                            (workloads.batch, 1))
+
     st = jax.vmap(functools.partial(init_state, cfg))(
         jnp.asarray(workloads.static_ams, jnp.int32),
         jnp.asarray(workloads.amq_len, jnp.int32),
@@ -1232,15 +1363,32 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
     engine = _get_engine(cfg, chunk, n_max)
     st, over, idle = engine(jnp.asarray(workloads.prog, jnp.int32),
                             jnp.asarray(lane_modes, jnp.int32),
-                            jnp.asarray(lane_geoms, jnp.int32), st)
+                            jnp.asarray(lane_geoms, jnp.int32),
+                            jnp.asarray(sub_ids, jnp.int32),
+                            jnp.asarray(local_ids, jnp.int32), st)
     over = np.asarray(over)
     if over.any():
-        raise RuntimeError("pending-FIFO overflow: consumption guarantee "
-                           "violated (simulator invariant; lanes "
-                           f"{np.nonzero(over)[0].tolist()})")
-    idle = np.asarray(idle)
-    return [_lane_result(cfg, st, bool(idle[b]), b,
-                         int(lane_geoms[b, 0] * lane_geoms[b, 1]))
+        bad = np.nonzero(over)[0].tolist()
+        err = RuntimeError("pending-FIFO overflow: consumption guarantee "
+                           f"violated (simulator invariant; lanes {bad})")
+        err.lanes = bad  # structured, so pack=True can name input lanes
+        raise err
+    idle = np.asarray(idle)                      # (B, N) per-PE group idle
+    host = _host_stats(st)
+    if workloads.plan is not None:
+        # un-pack: one result per ORIGINAL lane, gathered from its
+        # sub-mesh rectangle (plan order is input order by construction).
+        out = []
+        for sub in workloads.plan.placements:
+            w_sup = workloads.plan.super_geoms[sub.super_lane][0]
+            ids = sub.pe_ids(w_sup)
+            out.append(_pe_slice_result(
+                host, bool(idle[sub.super_lane, ids[0]]),
+                sub.super_lane, ids))
+        return out
+    return [_pe_slice_result(
+        host, bool(idle[b, 0]), b,
+        np.arange(int(lane_geoms[b, 0] * lane_geoms[b, 1])))
             for b in range(workloads.batch)]
 
 

@@ -82,6 +82,46 @@ def test_mixed_geometry_lanes_match_solo_runs():
         assert wl.check(m.mem_val)
 
 
+def test_fig16_simulate_on_packed_run_many():
+    """Fast-tier smoke of the Fig. 16 --simulate cross-check: the whole
+    sparsity grid goes through the packed run_many path in one call and
+    the measured output densities track the analytic model."""
+    from benchmarks import fig16_bandwidth
+    out = fig16_bandwidth.simulate_sparsity_axis(
+        n=10, seed=13, sparsities=(0.30, 0.70), mem_words=1024)
+    assert set(out) == {0.30, 0.70}
+    for sp, row in out.items():
+        assert row["cycles"] > 0 and row["executed"] > 0
+        assert abs(row["d_out_model"] - row["d_out_sim"]) < 0.35
+    # the d^2 compute term: sparser inputs execute fewer instructions
+    assert out[0.70]["executed"] < out[0.30]["executed"]
+
+
+def test_harness_grid_pack_opt_in():
+    """harness.run_grid(pack=True) on a mixed-size grid: same table, one
+    engine, packing stats reported."""
+    a = compiler.random_sparse(8, 8, 0.4, RNG)
+    x = RNG.integers(-3, 4, size=(8,))
+    wls = [Workload(name="spmv", sparsity_note="sparse",
+                    build=lambda c, s: compiler.build_spmv(a, x, c,
+                                                           strategy=s),
+                    useful_ops=2 * int(np.count_nonzero(a)),
+                    cgra=None, systolic_cycles=None, mem_words=1024)]
+    stats: dict = {}
+    base = MachineConfig(width=2, height=2)
+    packed = harness.run_grid(wls, ["nexus"], base_cfg=base,
+                              max_cycles=100_000,
+                              sizes=[(2, 2), (4, 4)], pack=True,
+                              pack_stats=stats)
+    plain = harness.run_grid(wls, ["nexus"], base_cfg=base,
+                             max_cycles=100_000, sizes=[(2, 2), (4, 4)])
+    assert stats["packing_efficiency"] >= stats["unpacked_efficiency"]
+    for size in ("2x2", "4x4"):
+        p, q = packed["nexus"][size][0], plain["nexus"][size][0]
+        assert p["cycles"] == q["cycles"]
+        assert p["per_pe_busy"] == q["per_pe_busy"]
+
+
 def test_fig_scripts_render_from_grid_slices(tiny_table, capsys):
     """Every paper-figure formatter consumes the grid table without
     crashing — including the n/a paths for archs the tiny grid omits

@@ -1,0 +1,292 @@
+"""Sub-mesh lane packing: planner invariants + golden equivalence.
+
+The packing planner (repro.core.batch.plan_packing) is a deterministic
+2-D shelf/guillotine bin-packer; the property tests pin its contract:
+every lane placed exactly once, rectangles inside their super-mesh, no
+two co-tenant rectangles overlap, only same-group lanes co-tenant, and
+the plan is a pure function of its inputs.
+
+The golden suite pins the execution contract: a packed mixed-size batch
+(2x2 / 3x3 / 4x4 co-tenants of one padded super-lane) is bit-identical
+to the per-lane solo runs — including per-PE busy/stall arrays — and the
+whole packed (workload x mode x size) grid compiles exactly ONE engine.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import batch, compiler, machine
+from repro.core.machine import MachineConfig
+from repro.testing import given, settings, strategies as st
+
+RNG = np.random.default_rng(21)
+
+
+# ----------------------------------------------------------------------------
+# planner properties
+# ----------------------------------------------------------------------------
+def _check_plan(geoms, plan, super_geom=None, groups=None):
+    """Assert every structural invariant of a PackPlan."""
+    assert plan.n_lanes == len(geoms)
+    seen = sorted(p.lane for p in plan.placements)
+    assert seen == list(range(len(geoms))), "every lane placed exactly once"
+    n_max = max(w * h for (w, h) in plan.super_geoms)
+    if super_geom is not None:
+        # the padded axis never exceeds the requested packing mesh (or the
+        # largest fallback lane)
+        cap = max(super_geom[0] * super_geom[1],
+                  max(w * h for (w, h) in geoms))
+        assert n_max <= cap
+    for s in range(plan.n_supers):
+        subs = plan.lanes_of(s)
+        assert subs, "no empty super-lanes"
+        sw, sh = plan.super_geoms[s]
+        cells = np.zeros((sh, sw), dtype=np.int32)
+        for p in subs:
+            assert p.geom == tuple(geoms[p.lane])
+            (ox, oy), (w, h) = p.origin, p.geom
+            assert 0 <= ox and ox + w <= sw, (p, (sw, sh))
+            assert 0 <= oy and oy + h <= sh, (p, (sw, sh))
+            cells[oy:oy + h, ox:ox + w] += 1
+        assert cells.max() <= 1, f"overlap in super {s}"
+        if groups is not None:
+            assert len({groups[p.lane] for p in subs}) == 1, \
+                "co-tenants must share a group"
+
+
+def _random_case(rng):
+    n = int(rng.integers(1, 14))
+    geoms = [(int(rng.integers(1, 9)), int(rng.integers(1, 9)))
+             for _ in range(n)]
+    groups = [int(rng.integers(0, 3)) for _ in range(n)] \
+        if rng.random() < 0.5 else None
+    super_geom = (int(rng.integers(1, 10)), int(rng.integers(1, 10))) \
+        if rng.random() < 0.5 else None
+    return geoms, groups, super_geom
+
+
+def test_planner_invariants_seeded_sweep():
+    """Deterministic fallback for environments without hypothesis: a
+    seeded sweep over random lane sets, including lanes larger than the
+    packing mesh (solo fallback)."""
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        geoms, groups, super_geom = _random_case(rng)
+        plan = batch.plan_packing(geoms, super_geom=super_geom,
+                                  groups=groups)
+        _check_plan(geoms, plan, super_geom, groups)
+        again = batch.plan_packing(geoms, super_geom=super_geom,
+                                   groups=groups)
+        assert plan == again, "plan must be deterministic"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 8), st.integers(1, 8)),
+                min_size=1, max_size=16),
+       st.lists(st.integers(0, 2), min_size=16, max_size=16),
+       st.booleans())
+def test_planner_invariants_property(geoms, group_pool, grouped):
+    groups = group_pool[:len(geoms)] if grouped else None
+    plan = batch.plan_packing(geoms, groups=groups)
+    _check_plan(geoms, plan, None, groups)
+    assert plan == batch.plan_packing(geoms, groups=groups)
+
+
+def test_planner_co_tenants_small_meshes():
+    """The canonical win: four 2x2 lanes share one 4x4 super-lane."""
+    plan = batch.plan_packing([(2, 2)] * 4, super_geom=(4, 4))
+    assert plan.n_supers == 1
+    assert plan.efficiency() == 1.0
+    ids = np.concatenate([p.pe_ids(4) for p in plan.placements])
+    assert sorted(ids.tolist()) == list(range(16))
+
+
+def test_planner_groups_do_not_co_tenant():
+    plan = batch.plan_packing([(2, 2)] * 4, super_geom=(4, 4),
+                              groups=[0, 0, 1, 1])
+    assert plan.n_supers == 2
+    for s in range(2):
+        assert len(plan.lanes_of(s)) == 2
+
+
+def test_waves_serialize_dissimilar_areas():
+    """Full-mesh lanes get their own waves; small lanes share one."""
+    geoms = [(8, 8), (8, 8), (4, 4), (4, 4), (2, 2), (2, 2), (2, 2)]
+    waves = batch.plan_waves(geoms)
+    assert len(waves) == 3
+    assert sorted(sum(waves, [])) == list(range(len(geoms)))
+    # the two 8x8 lanes run alone; every small lane shares the first wave
+    sizes = [{geoms[i] for i in wave} for wave in waves]
+    assert sizes.count({(8, 8)}) == 2
+    assert {(4, 4), (2, 2)} in sizes
+
+
+def test_homogeneous_batch_is_one_wave():
+    """Equal-mesh lanes must NOT serialize: with no relative-runtime
+    signal, packing degrades to the identity plan — one wave, the plain
+    batched call (fig16's sparsity sweep relies on this), even when the
+    lanes don't match the packing mesh."""
+    assert batch.plan_waves([(4, 4)] * 3) == [[0, 1, 2]]
+    assert batch.plan_packing([(4, 4)] * 3).n_supers == 3
+    assert batch.plan_waves([(8, 8)] * 4, super_geom=(4, 4)) == \
+        [[0, 1, 2, 3]]
+    # mixed sizes still schedule: co-tenantable smalls share a wave,
+    # full-mesh lanes serialize (same-area different-workload lanes
+    # differ 10-30x in cycles, so parallel supers would step the max)
+    assert len(batch.plan_waves([(2, 2), (2, 2), (4, 4)])) == 2
+
+
+def test_pack_rejects_prestacked_batch(per_size):
+    stacked = batch.stack_workloads([per_size[2, 2][1]["spmv"]])
+    with pytest.raises(ValueError, match="already stacked"):
+        machine.run_many(_cfg(), stacked, pack=True)
+
+
+def test_unpacked_efficiency_baseline():
+    assert batch.unpacked_efficiency([(2, 2), (8, 8)]) == \
+        pytest.approx((4 + 64) / (2 * 64))
+
+
+# ----------------------------------------------------------------------------
+# golden equivalence: packed == solo, bit for bit
+# ----------------------------------------------------------------------------
+SIZES = [(2, 2), (3, 3), (4, 4)]
+
+
+def _cfg(w=4, h=4, **kw):
+    kw.setdefault("mem_words", 1024)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(width=w, height=h, **kw)
+
+
+def _sig(r):
+    return (r.cycles, r.executed, r.enroute, r.hops, r.injected,
+            r.completed, r.utilization, r.busy_frac, r.enroute_frac,
+            tuple(np.asarray(r.per_pe_busy).tolist()),
+            tuple(np.asarray(r.stall_per_port).ravel().tolist()))
+
+
+def _solo(cfg, wl):
+    return machine.run(cfg, wl.prog, wl.static_ams, wl.amq_len, wl.mem_val,
+                       wl.mem_meta)
+
+
+@pytest.fixture(scope="module")
+def per_size():
+    """One SpMV + one BFS per mesh size (placement is size-dependent)."""
+    from benchmarks.workloads import small_world_graph
+    a = compiler.random_sparse(14, 14, 0.35, RNG)
+    x = RNG.integers(-4, 5, size=(14,))
+    rp, col = small_world_graph(20, 4, 3)
+    out = {}
+    for (w, h) in SIZES:
+        cfg = _cfg(w, h)
+        out[w, h] = cfg, {
+            "spmv": compiler.build_spmv(a, x, cfg),
+            "bfs": compiler.build_bfs(rp, col, 0, cfg),
+        }
+    return out
+
+
+def test_packed_mixed_sizes_match_solo_runs(per_size):
+    """2x2 + 3x3 co-tenants of one 4x4 super-lane (plus the full 4x4
+    lane) == per-lane solo runs, bit for bit, incl. per-PE arrays."""
+    lanes = [(size, *per_size[size]) for size in SIZES]
+    wls = [by["spmv"] for _, _, by in lanes]
+    stats: dict = {}
+    results = machine.run_many(_cfg(), wls, pack=True, pack_stats=stats)
+    # 3x3 and 2x2 cannot share a 4x4 super (no room), but the plan must
+    # never be WORSE than one lane per workload
+    assert stats["packing_efficiency"] >= stats["unpacked_efficiency"]
+    for ((w, h), cfg, by), r in zip(lanes, results):
+        s = _solo(cfg, by["spmv"])
+        assert _sig(s) == _sig(r), (w, h)
+        assert r.per_pe_busy.shape == (w * h,)
+        assert r.stall_per_port.shape == (w * h, machine.PORTS)
+        np.testing.assert_array_equal(
+            s.mem_val, r.mem_val[:, :s.mem_val.shape[1]], err_msg=f"{w}x{h}")
+        assert by["spmv"].check(r.mem_val)
+
+
+def test_packed_co_tenants_match_solo_runs(per_size):
+    """Forcing a 6x6 packing mesh makes 2x2 + 3x3 + 4x4 genuine
+    co-tenants of ONE super-lane; metrics still match the solo runs."""
+    wls = [per_size[size][1][name]
+           for size in SIZES for name in ("spmv", "bfs")]
+    stats: dict = {}
+    results = machine.run_many(_cfg(), wls, pack=True, super_geom=(6, 6),
+                               pack_stats=stats)
+    assert stats["n_super_lanes"] < len(wls), "packing must co-tenant"
+    i = 0
+    for size in SIZES:
+        cfg, by = per_size[size]
+        for name in ("spmv", "bfs"):
+            s = _solo(cfg, by[name])
+            assert _sig(s) == _sig(results[i]), (size, name)
+            assert by[name].check(results[i].mem_val), (size, name)
+            i += 1
+
+
+def test_packed_grid_one_engine(per_size):
+    """engine_cache_size() == 1 after a packed workload x mode x size
+    grid (modes constrain co-tenancy but stay per-lane runtime data)."""
+    points = [(size, name, mode)
+              for size in SIZES for name in ("spmv", "bfs")
+              for mode in machine.FABRIC_MODES]
+    wls = [per_size[size][1][name] for size, name, _ in points]
+    modes = [mode for _, _, mode in points]
+    machine.clear_engine_cache()
+    results = machine.run_many(_cfg(), wls, modes=modes, pack=True)
+    assert machine.engine_cache_size() == 1
+    assert all(r.completed for r in results)
+    # spot-check one mode-dependent metric against the solo runs
+    for (size, name, mode), r in zip(points, results):
+        if name == "spmv" and size == (3, 3):
+            cfg = dataclasses.replace(per_size[size][0],
+                                      **machine.mode_flags(mode))
+            assert _sig(_solo(cfg, per_size[size][1][name])) == _sig(r), mode
+
+
+@pytest.mark.slow
+def test_packed_full_mode_grid_matches_solo(per_size):
+    """Every (size x workload x mode) point of the packed grid equals its
+    solo run bit-for-bit (the slow-tier exhaustive version)."""
+    points = [(size, name, mode)
+              for size in SIZES for name in ("spmv", "bfs")
+              for mode in machine.FABRIC_MODES]
+    wls = [per_size[size][1][name] for size, name, _ in points]
+    results = machine.run_many(_cfg(), wls,
+                               modes=[m for _, _, m in points], pack=True)
+    for (size, name, mode), r in zip(points, results):
+        cfg = dataclasses.replace(per_size[size][0],
+                                  **machine.mode_flags(mode))
+        s = _solo(cfg, per_size[size][1][name])
+        assert _sig(s) == _sig(r), (size, name, mode)
+        np.testing.assert_array_equal(
+            s.mem_val, r.mem_val[:, :s.mem_val.shape[1]],
+            err_msg=f"{size}/{name}/{mode}")
+
+
+# ----------------------------------------------------------------------------
+# API contract
+# ----------------------------------------------------------------------------
+def test_pack_requires_compiled_workloads(per_size):
+    wl = per_size[2, 2][1]["spmv"]
+    with pytest.raises(ValueError, match="geometry"):
+        machine.run_many(_cfg(), [(wl.prog, wl.static_ams, wl.amq_len,
+                                   wl.mem_val, wl.mem_meta)], pack=True)
+
+
+def test_pack_requires_traced_axes(per_size):
+    wl = per_size[2, 2][1]["spmv"]
+    with pytest.raises(ValueError, match="traced"):
+        machine.run_many(
+            dataclasses.replace(_cfg(), traced_geometry=False), [wl],
+            pack=True)
+
+
+def test_pack_rejects_geom_override(per_size):
+    wl = per_size[2, 2][1]["spmv"]
+    with pytest.raises(ValueError, match="geoms"):
+        machine.run_many(_cfg(), [wl], geoms=[(2, 2)], pack=True)
