@@ -13,12 +13,25 @@ trajectory of the repo accumulates run over run:
     utilization, sweep wall-clock, engine-cache size, packing efficiency
     (occupied / padded-stepped PE fraction) and lanes-per-engine.
 
+Both artifacts also carry the multi-device lane-sharding leg: the same
+grid re-run with ``shard=True`` (the lane axis split over
+``jax.devices()``), recording ``n_devices`` / ``lanes_per_device`` and
+the shard-vs-solo wall-clock, cold-vs-cold (the engine cache is cleared
+before EACH leg so both pay their own compile) — on a one-device runner
+the sharded leg degrades to the plain engine, so the line doubles as an
+honest no-op measurement; the forced-multi-device CI job exercises it
+for real.
+
 Perf-regression gates (exit 1 on violation):
 
   * the smoke grid's per-lane cycle counts must equal the checked-in
     golden values (benchmarks/golden/bench_smoke.json) — the simulator is
     a deterministic integer machine, so ANY drift is a semantic change
-    that must be acknowledged by re-running with ``--update-golden``;
+    that must be acknowledged by re-running with ``--update-golden``
+    (drift reports name each lane's (workload, mode, size) coordinates
+    next to both cycle counts — see :func:`diff_cycles`);
+  * the sharded legs must reproduce the solo cycle counts exactly
+    (sharding relocates lanes across devices, never changes them);
   * ``machine.engine_cache_size()`` must be exactly 1 after each full
     grid — more means a lane silently recompiled (the mode/geometry axes
     stopped being runtime data);
@@ -48,7 +61,56 @@ GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
 def _meta() -> dict:
     import jax
     return dict(python=platform.python_version(), jax=jax.__version__,
-                backend=jax.default_backend())
+                backend=jax.default_backend(), n_devices=len(jax.devices()))
+
+
+def _flatten_cycles(grid: dict, prefix: str = "") -> dict:
+    """Flatten a nested cycles table to ``{label: cycles}``.
+
+    Labels name every lane coordinate on the way down — workload, then
+    mode and/or mesh size (``spmv/nexus``, ``spmv/nexus@2x2``,
+    ``bfs@8x8`` ...) — so a drift report points at the exact grid point
+    instead of a bare number.  Leaves may be plain cycle counts or
+    result rows carrying a ``cycles`` field.
+    """
+    out = {}
+    for key, v in grid.items():
+        sep = "@" if "x" in str(key) and str(key)[0].isdigit() else "/"
+        label = f"{prefix}{sep}{key}" if prefix else str(key)
+        if isinstance(v, dict):
+            if "cycles" in v and not isinstance(v["cycles"], dict):
+                out[label] = v["cycles"]
+            else:
+                out.update(_flatten_cycles(v, label))
+        else:
+            out[label] = v
+    return out
+
+
+def diff_cycles(want: dict, got: dict, *, want_name: str = "golden",
+                got_name: str = "got") -> list[str]:
+    """Labeled per-lane cycle diff of two (possibly nested) grid tables.
+
+    Every message names the lane's (workload, mode, size) coordinates —
+    the flattened label — next to both cycle counts, so drift output
+    reads like ``cycle drift: spmv/nexus@2x2 golden=118 got=121``.
+    """
+    fw, fg = _flatten_cycles(want), _flatten_cycles(got)
+    # remediation advice only fits the golden gate; shard-vs-solo (or
+    # any other) comparisons name the sides instead.
+    hint = (" (run --update-golden)" if want_name == "golden"
+            else f" (absent from {want_name})")
+    errors = []
+    for label in sorted(fw):
+        if label not in fg:
+            errors.append(f"missing lane: {label} ({want_name}="
+                          f"{fw[label]}, absent from {got_name})")
+        elif fg[label] != fw[label]:
+            errors.append(f"cycle drift: {label} {want_name}={fw[label]} "
+                          f"{got_name}={fg[label]}")
+    for label in sorted(set(fg) - set(fw)):
+        errors.append(f"untracked grid point: {label}{hint}")
+    return errors
 
 
 def smoke_workloads():
@@ -82,7 +144,10 @@ def smoke_workloads():
 
 def run_smoke() -> dict:
     """The tiny harness grid: one engine, one device call, deterministic
-    cycle counts."""
+    cycle counts — run solo AND with the lane axis sharded over
+    ``jax.devices()`` (the same grid both ways; the sharded leg must
+    reproduce the identical cycle counts, which the forced-multi-device
+    CI job checks against the golden for real)."""
     from benchmarks import harness
     from repro.core import machine
     from repro.core.machine import MachineConfig
@@ -92,26 +157,53 @@ def run_smoke() -> dict:
     grid = harness.run_grid(wls, base_cfg=MachineConfig(width=2, height=2),
                             max_cycles=100_000)
     wall = time.time() - t0
-    table = {
-        wl.name: {
-            mode: dict(cycles=rows[i]["cycles"],
-                       utilization=rows[i]["utilization"],
-                       executed=rows[i]["executed"])
-            for mode, rows in grid.items()
+    engines_solo = machine.engine_cache_size()
+
+    def table_of(g):
+        return {
+            wl.name: {
+                mode: dict(cycles=rows[i]["cycles"],
+                           utilization=rows[i]["utilization"],
+                           executed=rows[i]["executed"])
+                for mode, rows in g.items()
+            }
+            for i, wl in enumerate(wls)
         }
-        for i, wl in enumerate(wls)
-    }
+
+    shard_stats: dict = {}
+    # cold-vs-cold: the solo leg above paid its engine compile, so the
+    # sharded leg starts from a fresh cache too — otherwise a 1-device
+    # host (where shard reuses the very same engine) would record its
+    # warm rerun as a phantom shard speedup.
+    machine.clear_engine_cache()
+    t0 = time.time()
+    grid_sh = harness.run_grid(wls,
+                               base_cfg=MachineConfig(width=2, height=2),
+                               max_cycles=100_000, shard=True,
+                               shard_stats=shard_stats)
+    wall_sh = time.time() - t0
+    engines_shard = machine.engine_cache_size()
+    table = table_of(grid)
+    shard_drift = diff_cycles(table, table_of(grid_sh),
+                              want_name="solo", got_name="sharded")
     n_lanes = len(wls) * len(grid)
     return dict(meta=_meta(), wall_s=round(wall, 3),
-                engine_cache_size=machine.engine_cache_size(),
-                lanes_per_engine=n_lanes / machine.engine_cache_size(),
+                wall_shard_s=round(wall_sh, 3),
+                n_devices=shard_stats["n_devices"],
+                lanes_per_device=shard_stats["lanes_per_device"],
+                shard_drift=shard_drift,
+                engine_cache_size=engines_solo,
+                engine_cache_size_shard=engines_shard,
+                lanes_per_engine=n_lanes / engines_solo,
                 grid=table)
 
 
 def run_fig17() -> dict:
     """The batched Fig. 17 sweep: the whole sizes x workloads grid as ONE
     packed run_many call on one compiled engine (small meshes
-    co-scheduled inside shared padded super-lanes)."""
+    co-scheduled inside shared padded super-lanes), plus a shard-vs-solo
+    leg — the same grid with the lane axis sharded over
+    ``jax.devices()``, gated to produce identical cycle counts."""
     from benchmarks import fig17_scaling
     from repro.core import machine
     machine.clear_engine_cache()
@@ -120,10 +212,26 @@ def run_fig17() -> dict:
     data = fig17_scaling.run_grid(fig17_scaling._builders(),
                                   pack_stats=pack_stats)
     wall = time.time() - t0
+    engines_solo = machine.engine_cache_size()
+    shard_stats: dict = {}
+    # cold-vs-cold, like run_smoke: both legs pay their own compile.
+    machine.clear_engine_cache()
+    t0 = time.time()
+    data_sh = fig17_scaling.run_grid(fig17_scaling._builders(),
+                                     shard=True, shard_stats=shard_stats)
+    wall_sh = time.time() - t0
+    engines_shard = machine.engine_cache_size()
+    shard_drift = diff_cycles(data, data_sh,
+                              want_name="solo", got_name="sharded")
     n_lanes = sum(len(v) for v in data.values())
     return dict(meta=_meta(), wall_s=round(wall, 3),
-                engine_cache_size=machine.engine_cache_size(),
-                lanes_per_engine=n_lanes / machine.engine_cache_size(),
+                wall_shard_s=round(wall_sh, 3),
+                n_devices=shard_stats["n_devices"],
+                lanes_per_device=shard_stats["lanes_per_device"],
+                shard_drift=shard_drift,
+                engine_cache_size=engines_solo,
+                engine_cache_size_shard=engines_shard,
+                lanes_per_engine=n_lanes / engines_solo,
                 packing_efficiency=pack_stats["packing_efficiency"],
                 unpacked_efficiency=pack_stats["unpacked_efficiency"],
                 n_waves=pack_stats["n_waves"],
@@ -131,7 +239,12 @@ def run_fig17() -> dict:
 
 
 def check_golden(smoke: dict, update: bool) -> list[str]:
-    """Compare smoke-grid cycles against the checked-in golden values."""
+    """Compare smoke-grid cycles against the checked-in golden values.
+
+    Drift reports go through :func:`diff_cycles`, so every violation
+    names its lane's (workload, mode) coordinates next to both cycle
+    counts instead of a bare value diff.
+    """
     got = {name: {mode: row["cycles"] for mode, row in modes.items()}
            for name, modes in smoke["grid"].items()}
     if update:
@@ -144,19 +257,7 @@ def check_golden(smoke: dict, update: bool) -> list[str]:
         return [f"golden file missing: {GOLDEN} (run --update-golden)"]
     with open(GOLDEN) as f:
         want = json.load(f)
-    errors = []
-    for name, modes in want.items():
-        for mode, cycles in modes.items():
-            have = got.get(name, {}).get(mode)
-            if have != cycles:
-                errors.append(f"cycle drift: {name}/{mode} golden={cycles} "
-                              f"got={have}")
-    for name, modes in got.items():
-        for mode in modes:
-            if mode not in want.get(name, {}):
-                errors.append(f"untracked grid point: {name}/{mode} "
-                              "(run --update-golden)")
-    return errors
+    return diff_cycles(want, got)
 
 
 def main() -> int:
@@ -182,22 +283,39 @@ def main() -> int:
     with open(os.path.join(args.out, "BENCH_fig11.json"), "w") as f:
         json.dump(smoke, f, indent=1)
     print(f"smoke grid: wall={smoke['wall_s']}s "
+          f"(sharded {smoke['wall_shard_s']}s on {smoke['n_devices']} "
+          f"device(s), {smoke['lanes_per_device']} lanes/device) "
           f"engines={smoke['engine_cache_size']}")
     if smoke["engine_cache_size"] != 1:
         failures.append("smoke grid compiled "
                         f"{smoke['engine_cache_size']} engines (want 1): "
                         "a lane axis stopped being runtime data")
+    if smoke["engine_cache_size_shard"] != 1:
+        failures.append("smoke SHARDED grid compiled "
+                        f"{smoke['engine_cache_size_shard']} engines "
+                        "(want 1): the sharded path silently recompiled")
     failures += check_golden(smoke, args.update_golden)
+    failures += [f"smoke shard leg: {msg}" for msg in smoke["shard_drift"]]
 
     if not args.skip_fig17:
         fig17 = run_fig17()
         with open(os.path.join(args.out, "BENCH_fig17.json"), "w") as f:
             json.dump(fig17, f, indent=1)
         print(f"fig17 sweep: wall={fig17['wall_s']}s "
+              f"(sharded {fig17['wall_shard_s']}s on "
+              f"{fig17['n_devices']} device(s), "
+              f"{fig17['lanes_per_device']} lanes/device) "
               f"engines={fig17['engine_cache_size']} "
               f"packing_efficiency={fig17['packing_efficiency']:.3f} "
               f"(unpacked {fig17['unpacked_efficiency']:.3f}, "
               f"{fig17['n_waves']} waves)")
+        failures += [f"fig17 shard leg: {msg}"
+                     for msg in fig17["shard_drift"]]
+        if fig17["engine_cache_size_shard"] != 1:
+            failures.append("fig17 SHARDED sweep compiled "
+                            f"{fig17['engine_cache_size_shard']} engines "
+                            "(want 1): the sharded path silently "
+                            "recompiled")
         if fig17["engine_cache_size"] != 1:
             failures.append("fig17 size grid compiled "
                             f"{fig17['engine_cache_size']} engines "

@@ -59,7 +59,8 @@ def spmspm_traffic(n: int, d: float, sram_bytes: float) -> dict:
 
 def simulate_sparsity_axis(n: int = 24, seed: int = 13, *,
                            sparsities=(0.30, 0.60, 0.85),
-                           mem_words: int = 4096) -> dict:
+                           mem_words: int = 4096,
+                           shard: bool = False) -> dict:
     """Validate the analytic sparsity terms against the simulator.
 
     Builds one small SpMSpM per sparsity level and runs the whole grid
@@ -69,6 +70,8 @@ def simulate_sparsity_axis(n: int = 24, seed: int = 13, *,
     and schedule; mixed-size callers get sub-mesh co-tenancy for free).
     Compares measured output density with the model's ``d_out`` and
     checks the executed-op trend follows the ``d²`` compute term.
+    ``shard=True`` (the ``--shard`` leg) splits the sparsity lanes over
+    ``jax.devices()`` — bit-identical, a no-op on one device.
     """
     from repro.core import compiler, machine
     from repro.core.machine import MachineConfig
@@ -83,11 +86,15 @@ def simulate_sparsity_axis(n: int = 24, seed: int = 13, *,
         b = compiler.random_sparse(n, n, d, rng)
         wls.append(compiler.build_spmspm(a, b, cfg))
         dens.append(d)
-    results = machine.run_many(cfg, wls, pack=True)
+    shard_stats: dict = {}
+    results = machine.run_many(cfg, wls, pack=True, shard=shard,
+                               shard_stats=shard_stats if shard else None)
 
     print("-" * 78)
     print("simulated cross-check (batched sweep, one device call): "
-          f"SpMSpM n={n}")
+          f"SpMSpM n={n}" + (
+              f", sharded over {shard_stats['n_devices']} device(s)"
+              if shard else ""))
     print(f"{'sparsity':<10}{'d_out model':>12}{'d_out sim':>12}"
           f"{'executed':>10}{'cycles':>8}")
     out = {}
@@ -108,7 +115,7 @@ def simulate_sparsity_axis(n: int = 24, seed: int = 13, *,
     return out
 
 
-def main(simulate: bool = False):
+def main(simulate: bool = False, shard: bool = False):
     srams_kb = [32, 64, 128, 256, 512, 1024]
     sparsities = [0.30, 0.60, 0.85, 0.95]
     print("=" * 78)
@@ -139,9 +146,11 @@ def main(simulate: bool = False):
           "C = high compute intensity -> both budgets shrink")
     out = dict(bw_ratio_95_vs_30=ratio)
     if simulate:
-        out["simulated"] = simulate_sparsity_axis()
+        out["simulated"] = simulate_sparsity_axis(shard=shard)
     return out
 
 
 if __name__ == "__main__":
-    main(simulate="--simulate" in sys.argv)
+    # --shard only affects the simulated leg, so it implies --simulate.
+    main(simulate="--simulate" in sys.argv or "--shard" in sys.argv,
+         shard="--shard" in sys.argv)

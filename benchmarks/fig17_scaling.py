@@ -14,7 +14,10 @@ compile (``machine.engine_cache_size() == 1`` afterwards) and a handful
 of wave dispatches.  ``--bench`` times the packed grid against BOTH the
 per-size-compile baseline (one batched run per mesh size, each paying
 its own trace — the PR-2 state of this script) and the unpacked
-one-engine grid (the PR-3 state, which padded every lane to 8x8).
+one-engine grid (the PR-3 state, which padded every lane to 8x8), plus
+a packed+sharded leg (``run_many(shard=True)``: the lane axis split
+over ``jax.devices()``).  ``--shard`` runs the main grid sharded —
+bit-identical results, a no-op on one device.
 """
 from __future__ import annotations
 
@@ -66,19 +69,23 @@ def build_grid(builders, sizes=SIZES):
 
 
 def run_grid(builders, sizes=SIZES, *, pack: bool = True,
-             pack_stats: dict | None = None) -> dict:
+             pack_stats: dict | None = None, shard: bool = False,
+             shard_stats: dict | None = None) -> dict:
     """The entire sizes x workloads grid in ONE packed ``run_many`` call.
 
     Returns {workload: {"WxH": {cycles, utilization}}} — the Fig. 17
     table — after asserting every lane completed bit-exact.  With
     ``pack`` (default) small meshes are co-scheduled inside shared
     padded super-lanes; ``pack_stats`` receives the packing-efficiency
-    numbers.
+    numbers.  ``shard=True`` additionally splits each wave's lane axis
+    over ``jax.devices()`` (bit-identical; a no-op on one device), with
+    ``shard_stats`` receiving ``n_devices`` / ``lanes_per_device``.
     """
     lanes = build_grid(builders, sizes)
     results = machine.run_many(_size_cfg(*sizes[0]),
                                [wl for _, _, wl in lanes], pack=pack,
-                               pack_stats=pack_stats)
+                               pack_stats=pack_stats, shard=shard,
+                               shard_stats=shard_stats)
     out: dict = {name: {} for name in builders}
     for ((w, h), name, wl), r in zip(lanes, results):
         assert r.completed and wl.check(r.mem_val), f"{name} @ {w}x{h}"
@@ -211,15 +218,30 @@ def bench() -> dict:
                               pack=True)
     t_pack_warm = time.time() - t0
 
-    # per-lane metrics identical between all three paths
-    it = iter(zip(grid, packed))
+    shard_stats: dict = {}
+    machine.clear_engine_cache()
+    t0 = time.time()
+    sharded = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes],
+                               pack=True, shard=True,
+                               shard_stats=shard_stats)
+    t_shard_cold = time.time() - t0
+    n_shard_engines = machine.engine_cache_size()
+    t0 = time.time()
+    sharded = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes],
+                               pack=True, shard=True)
+    t_shard_warm = time.time() - t0
+
+    # per-lane metrics identical between all four paths
+    it = iter(zip(grid, packed, sharded))
     for (w, h) in SIZES:
         for s in per_size[w, h]:
-            g, p = next(it)
+            g, p, d = next(it)
             assert (s.cycles, s.executed, s.hops) == (g.cycles, g.executed,
                                                       g.hops)
             assert (s.cycles, s.executed, s.hops) == (p.cycles, p.executed,
                                                       p.hops)
+            assert (s.cycles, s.executed, s.hops) == (d.cycles, d.executed,
+                                                      d.hops)
     print(f"fig17 grid ({len(SIZES)} sizes x {len(builders)} workloads = "
           f"{len(lanes)} lanes), metrics identical:")
     print(f"  per-size batches, {n_seq_engines} engine compiles, cold: "
@@ -231,6 +253,10 @@ def bench() -> dict:
           f"{t_pack_cold:.1f}s  -> {t_seq_cold / t_pack_cold:.1f}x   "
           f"(steady: {t_pack_warm:.1f}s -> "
           f"{t_seq_warm / t_pack_warm:.1f}x)")
+    print(f"  packed+sharded,   {n_shard_engines} engine compile,  cold: "
+          f"{t_shard_cold:.1f}s   (steady: {t_shard_warm:.1f}s) on "
+          f"{shard_stats['n_devices']} device(s), "
+          f"{shard_stats['lanes_per_device']} lanes/device")
     print(f"  packing: {pack_stats['n_waves']} waves, efficiency "
           f"{pack_stats['packing_efficiency']:.2f} (unpacked "
           f"{pack_stats['unpacked_efficiency']:.2f})")
@@ -241,20 +267,30 @@ def bench() -> dict:
                 grid_engines=n_grid_engines,
                 packed_cold_s=t_pack_cold, packed_warm_s=t_pack_warm,
                 packed_engines=n_pack_engines,
+                sharded_cold_s=t_shard_cold, sharded_warm_s=t_shard_warm,
+                sharded_engines=n_shard_engines,
+                n_devices=shard_stats["n_devices"],
+                lanes_per_device=shard_stats["lanes_per_device"],
                 speedup_cold=t_seq_cold / t_cold,
                 speedup_warm=t_seq_warm / t_warm,
                 packed_speedup_cold=t_seq_cold / t_pack_cold,
                 packed_speedup_warm=t_seq_warm / t_pack_warm,
+                sharded_speedup_warm=t_pack_warm / t_shard_warm,
                 pack_stats=pack_stats,
                 smoke=smoke)
 
 
-def main(force: bool = False):
-    if os.path.exists(OUT) and not force:
+def main(force: bool = False, shard: bool = False):
+    if os.path.exists(OUT) and not force and not shard:
         with open(OUT) as f:
             data = json.load(f)
     else:
-        data = run_grid(_builders())
+        shard_stats: dict = {}
+        data = run_grid(_builders(), shard=shard,
+                        shard_stats=shard_stats if shard else None)
+        if shard:
+            print(f"sharded over {shard_stats['n_devices']} device(s), "
+                  f"{shard_stats['lanes_per_device']} lanes/device")
         os.makedirs(os.path.dirname(OUT), exist_ok=True)
         with open(OUT, "w") as f:
             json.dump(data, f, indent=1)
@@ -283,4 +319,4 @@ if __name__ == "__main__":
     if "--bench" in sys.argv:
         bench()
     else:
-        main(force="--force" in sys.argv)
+        main(force="--force" in sys.argv, shard="--shard" in sys.argv)

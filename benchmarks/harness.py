@@ -67,7 +67,8 @@ def _result_row(res, batch_wall: float) -> dict:
 def run_grid(wls: list[Workload], modes=None, *,
              base_cfg: MachineConfig | None = None,
              max_cycles: int = 400_000, sizes=None, pack: bool = False,
-             pack_stats: dict | None = None) -> dict:
+             pack_stats: dict | None = None, shard: bool = False,
+             cycle_hints=None, shard_stats: dict | None = None) -> dict:
     """Run the full (workload x fabric-mode [x mesh-size]) grid in ONE
     batched device call.
 
@@ -85,6 +86,12 @@ def run_grid(wls: list[Workload], modes=None, *,
     each stepping the full padded PE axis (see
     ``repro.core.batch.pack_schedule``; metrics stay bit-identical).
     ``pack_stats`` receives the packing-efficiency numbers.
+
+    ``shard=True`` splits the grid's lane axis over ``jax.devices()``
+    (``machine.run_many(shard=True)``; a no-op on one device), with
+    ``cycle_hints`` (per-lane measured cycles, grid lane order) feeding
+    the shard/wave balancers and ``shard_stats`` receiving
+    ``n_devices`` / ``lanes_per_device``.
 
     Returns ``{mode: [result-row per workload, in input order]}`` when
     ``sizes`` is None (the classic Figs. 11-14 grid on ``base_cfg``'s
@@ -115,7 +122,9 @@ def run_grid(wls: list[Workload], modes=None, *,
         max_cycles=max_cycles)
     t0 = time.time()
     results = machine.run_many(run_cfg, built, modes=lane_modes, pack=pack,
-                               pack_stats=pack_stats)
+                               pack_stats=pack_stats, shard=shard,
+                               cycle_hints=cycle_hints,
+                               shard_stats=shard_stats)
     wall = time.time() - t0
     out: dict = {}
     lanes = iter(zip(built, results))

@@ -85,7 +85,7 @@ def fmt(rec):
 
 def fabric_autotune(workload: str = "spmv", sizes=None, *,
                     builders=None, save: bool = True,
-                    pack: bool = True) -> dict:
+                    pack: bool = True, shard: bool = False) -> dict:
     """Pick the best mesh geometry for a workload by running EVERY
     candidate as a lane of one batched device call.
 
@@ -93,7 +93,9 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
     disjoint sub-meshes of shared padded super-lanes
     (``machine.run_many(pack=True)``) instead of each small candidate
     stepping the full padded PE axis; the packing plan the search ran
-    over is logged in the record.  Scores both ends of the trade:
+    over is logged in the record.  ``shard=True`` additionally fans the
+    candidate lanes out over ``jax.devices()`` (bit-identical; a no-op
+    on one device).  Scores both ends of the trade:
     latency (cycles) and efficiency (cycles x PEs — the area-delay
     proxy).  Returns the scored table with the argmin of each; with
     ``save`` the record lands in experiments/perf/fabric__<workload>.json.
@@ -109,8 +111,11 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
     from benchmarks.fig17_scaling import _size_cfg
     lanes = [builders[workload](_size_cfg(w, h)) for (w, h) in sizes]
     pack_stats: dict = {}
+    shard_stats: dict = {}
     results = machine.run_many(_size_cfg(*sizes[0]), lanes, pack=pack,
-                               pack_stats=pack_stats if pack else None)
+                               pack_stats=pack_stats if pack else None,
+                               shard=shard,
+                               shard_stats=shard_stats if shard else None)
     table = {}
     for (w, h), wl, r in zip(sizes, lanes, results):
         assert r.completed and wl.check(r.mem_val), f"{workload} @ {w}x{h}"
@@ -122,7 +127,8 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
     rec = dict(workload=workload, table=table, best_latency=best_lat,
                best_efficiency=best_eff,
                engine_cache_size=machine.engine_cache_size(),
-               packed=pack, pack_stats=pack_stats or None)
+               packed=pack, pack_stats=pack_stats or None,
+               sharded=shard, shard_stats=shard_stats or None)
     if save:
         os.makedirs(OUT, exist_ok=True)
         with open(os.path.join(OUT, f"fabric__{workload}.json"), "w") as f:
@@ -151,10 +157,14 @@ def main():
     ap.add_argument("--no-pack", dest="pack", action="store_false",
                     help="one padded lane per candidate (the pre-packing "
                          "behaviour)")
+    ap.add_argument("--shard", action="store_true",
+                    help="fan candidate lanes out over jax.devices() "
+                         "(bit-identical; a no-op on one device)")
     args = ap.parse_args()
     if args.fabric:
         sizes = _parse_sizes(args.sizes) if args.sizes else None
-        rec = fabric_autotune(args.fabric, sizes, pack=args.pack)
+        rec = fabric_autotune(args.fabric, sizes, pack=args.pack,
+                              shard=args.shard)
         for sz, row in rec["table"].items():
             print(f"{args.fabric} @ {sz:<5} cycles={row['cycles']:>8} "
                   f"cycle*PEs={row['cycle_pes']:>9} "
@@ -162,6 +172,10 @@ def main():
         print(f"best latency: {rec['best_latency']}   "
               f"best efficiency: {rec['best_efficiency']}   "
               f"(engines compiled: {rec['engine_cache_size']})")
+        if rec.get("shard_stats"):
+            ss = rec["shard_stats"]
+            print(f"candidates sharded over {ss['n_devices']} device(s), "
+                  f"{ss['lanes_per_device']} lanes/device")
         if rec.get("pack_stats"):
             ps = rec["pack_stats"]
             print(f"packing plan searched: {ps['n_waves']} wave(s), "

@@ -61,6 +61,18 @@ credit that matters.  The engine only needs per-sub-lane *accounting*
 (idle detection, cycle freeze, stats) — carried by the ``sub_ids`` /
 ``local_ids`` per-PE vectors this module emits (see
 :mod:`repro.core.machine`).
+
+Multi-device lane sharding
+--------------------------
+Lanes are embarrassingly parallel, so ``run_many(..., shard=True)``
+splits the lane axis over ``jax.devices()``.  :func:`plan_shards`
+balances lanes across devices by the same runtime estimate the wave
+planner uses (:func:`shard_loads`: mesh area without an oracle,
+measured ``cycle_hints`` with one) and pads the batch to a multiple of
+the device count with *inert* lanes (an empty 1x1 workload is idle at
+cycle 0), so every shard carries the same ``(B/D, P, Q, M, N)`` shapes
+and the whole sweep stays ONE compiled executable — per-lane runtime
+data, never a per-device recompile.
 """
 from __future__ import annotations
 
@@ -549,7 +561,90 @@ def pack_workloads(workloads, modes=None, *, super_geom=None
     )
 
 
-def plan_waves(geoms, *, super_geom=None, groups=None) -> list[list[int]]:
+def validate_hints(cycle_hints, n_lanes: int) -> list[float]:
+    """Coerce + validate a ``cycle_hints`` sequence (the measured
+    per-lane runtime oracle): one non-negative number per lane.  The
+    single checkpoint for every path that accepts hints, so a malformed
+    list fails identically whether or not the planner that would
+    consume it ends up running."""
+    import math
+    hints = [float(h) for h in cycle_hints]
+    if len(hints) != n_lanes:
+        raise ValueError(f"{len(hints)} cycle hints for {n_lanes} lanes")
+    if any(h < 0 or not math.isfinite(h) for h in hints):
+        raise ValueError("cycle hints must be non-negative finite "
+                         "numbers")
+    return hints
+
+
+def shard_loads(geoms, cycle_hints=None) -> list[float]:
+    """Per-lane runtime estimate used by the wave and shard planners.
+
+    With ``cycle_hints`` (measured per-lane cycle counts from a prior
+    run — the runtime *oracle*) the hint IS the load.  Without one, the
+    mesh-area proxy the Fig. 17 regime justifies applies: the same
+    problem on a smaller mesh runs longer, so load is the inverse mesh
+    area (scaled by the largest lane so the smallest-area lane — the
+    longest-running one — gets the largest load).
+    """
+    geoms = [(int(w), int(h)) for (w, h) in geoms]
+    if cycle_hints is not None:
+        return validate_hints(cycle_hints, len(geoms))
+    a_max = max(w * h for (w, h) in geoms)
+    return [a_max / float(w * h) for (w, h) in geoms]
+
+
+def plan_shards(geoms, n_devices: int, *, cycle_hints=None
+                ) -> list[list[int]]:
+    """Assign lanes to devices for the sharded engine (lane-axis
+    ``shard_map``).
+
+    Every device must carry the SAME number of lanes (shard_map splits
+    the lane axis evenly), so the batch is padded up to
+    ``ceil(B / n_devices) * n_devices`` with **inert** pad lanes —
+    marked ``-1`` in the returned plan; ``run_many`` materializes them
+    as empty 1x1 workloads that are idle at cycle 0 and touch no
+    statistics.  Real lanes are balanced by :func:`shard_loads` (the
+    mesh-area runtime proxy, or measured ``cycle_hints``): a greedy
+    longest-first (LPT) assignment under the per-device capacity, kept
+    only when its makespan beats the round-robin deal — so the plan is
+    never worse-balanced than round-robin, deterministically.
+
+    Returns ``n_devices`` lists of exactly ``ceil(B / n_devices)``
+    entries each (lane index or ``-1``); every lane appears exactly
+    once, ascending within its device.
+    """
+    geoms = [(int(w), int(h)) for (w, h) in geoms]
+    if not geoms:
+        raise ValueError("empty geometry list")
+    if n_devices < 1:
+        raise ValueError(f"bad device count {n_devices}")
+    load = shard_loads(geoms, cycle_hints)
+    b = len(geoms)
+    cap = -(-b // n_devices)                     # lanes per device
+    # LPT: longest lane first onto the least-loaded device with room.
+    order = sorted(range(b), key=lambda i: (-load[i], i))
+    lpt: list[list[int]] = [[] for _ in range(n_devices)]
+    tot = [0.0] * n_devices
+    for i in order:
+        d = min((d for d in range(n_devices) if len(lpt[d]) < cap),
+                key=lambda d: (tot[d], d))
+        lpt[d].append(i)
+        tot[d] += load[i]
+    # Round-robin baseline (deal in input order): keep LPT only when it
+    # is at least as balanced, so the planner provably never regresses.
+    rr = [[i for i in range(b) if i % n_devices == d]
+          for d in range(n_devices)]
+
+    def makespan(plan):
+        return max(sum(load[i] for i in dev) for dev in plan)
+
+    best = lpt if makespan(lpt) <= makespan(rr) else rr
+    return [sorted(dev) + [-1] * (cap - len(dev)) for dev in best]
+
+
+def plan_waves(geoms, *, super_geom=None, groups=None, cycle_hints=None,
+               parallel: int = 1) -> list[list[int]]:
     """Partition lanes into co-scheduling *waves* (device-call batches).
 
     Each wave holds at most ONE super-lane per group and is packed tight
@@ -561,14 +656,34 @@ def plan_waves(geoms, *, super_geom=None, groups=None) -> list[list[int]]:
     (a short lane in a long wave steps dead rows for the difference).
     With no runtime oracle, mesh area is the proxy the Fig. 17 regime
     justifies: the same problem on a smaller mesh runs longer, and
-    same-size lanes run comparably.  Lanes are therefore taken area-
-    ascending (longest first) and first-fit into the earliest wave whose
-    super still has room.
+    same-size lanes run comparably.  Lanes are therefore taken longest-
+    first by :func:`shard_loads` (area-ascending without hints) and
+    first-fit into the earliest wave whose super still has room.
+    ``cycle_hints`` (measured per-lane cycles from a prior run) replace
+    the area proxy, so a re-planned sweep co-tenants lanes by their
+    MEASURED runtimes — dissimilar-runtime same-area lanes stop sharing
+    a wave's makespan.
+
+    ``parallel`` widens a wave for the sharded engine: a wave may carry
+    up to ``max(parallel, n_groups)`` super-lanes in total — 1 per
+    group (the classic rule) on the single-device engine, up to one
+    per DEVICE on a D-device schedule.  Rationale: serialization
+    exists because co-scheduled supers in ONE device call step the
+    wave's max makespan; super-lanes on *different devices* do not
+    couple, so up to D dissimilar supers run side by side
+    (``plan_shards`` puts them one per device) and the dissimilar-
+    runtime waves merge instead of running back to back.  The bound is
+    TOTAL supers, not per group — D+1 supers on D devices would
+    co-locate two (load-blind, since same-geom supers carry no area
+    signal) and re-couple what the wave split exists to separate;
+    above-D group counts keep the one-per-group rule, whose co-tenants
+    host the same lane set across groups (similar runtimes).
 
     Returns the list of waves, each a list of lane indices (every lane in
     exactly one wave).
     """
     geoms = [(int(w), int(h)) for (w, h) in geoms]
+    parallel = max(1, int(parallel))
     if super_geom is None:
         super_geom = (max(w for w, _ in geoms), max(h for _, h in geoms))
     group_list = [None] * len(geoms) if groups is None else list(groups)
@@ -583,10 +698,29 @@ def plan_waves(geoms, *, super_geom=None, groups=None) -> list[list[int]]:
         # different-workload lanes routinely differ 10-30x in cycles
         # (fig17's three 8x8 lanes: 2565/798/86), and one slow lane in a
         # parallel-super wave makes every co-scheduled super step its
-        # makespan.
-        return [list(range(len(geoms)))]
-    order = sorted(range(len(geoms)),
-                   key=lambda i: (geoms[i][0] * geoms[i][1], i))
+        # makespan.  cycle_hints are the exception: measured runtimes
+        # carry the signal area cannot, so hinted same-size lanes split
+        # at factor-of-2 runtime boundaries — a lane joins the current
+        # (longest-first) wave only while it runs at least half the
+        # wave's makespan, so short lanes stop stepping dead rows inside
+        # a long wave (cost B*max per wave vs the one-wave B*max).
+        # Sharded schedules (parallel > 1) skip the split: plan_shards
+        # consumes the same hints to balance lanes across devices, each
+        # device terminates at its own shard's makespan, and LPT pairs
+        # similar loads — serializing would only add dispatches.
+        if cycle_hints is None or parallel > 1:
+            return [list(range(len(geoms)))]
+        load = shard_loads(geoms, cycle_hints)
+        order = sorted(range(len(geoms)), key=lambda i: (-load[i], i))
+        waves = []
+        for i in order:
+            if waves and 2 * load[i] >= max(load[j] for j in waves[-1]):
+                waves[-1].append(i)
+            else:
+                waves.append([i])
+        return [sorted(w) for w in waves]
+    load = shard_loads(geoms, cycle_hints)
+    order = sorted(range(len(geoms)), key=lambda i: (-load[i], i))
     waves: list[list[int]] = []
     for i in order:
         placed = False
@@ -595,7 +729,8 @@ def plan_waves(geoms, *, super_geom=None, groups=None) -> list[list[int]]:
             plan = plan_packing([geoms[j] for j in cand],
                                 super_geom=super_geom,
                                 groups=[group_list[j] for j in cand])
-            if plan.n_supers == len({group_list[j] for j in cand}) and \
+            n_groups = len({group_list[j] for j in cand})
+            if plan.n_supers <= max(parallel, n_groups) and \
                     all(g == tuple(super_geom) for g in plan.super_geoms):
                 wave.append(i)
                 placed = True
@@ -635,7 +770,8 @@ def _pad_batch(wb: BatchedWorkloads, p: int, q: int, m: int, n: int,
         sub_ids=sub_ids, local_ids=local_ids)
 
 
-def pack_schedule(workloads, modes=None, *, super_geom=None):
+def pack_schedule(workloads, modes=None, *, super_geom=None,
+                  cycle_hints=None, parallel: int = 1):
     """Plan + pack the full co-schedule for ``run_many(pack=True)``.
 
     Returns ``(batches, lane_maps, stats)``: one packed
@@ -646,14 +782,19 @@ def pack_schedule(workloads, modes=None, *, super_geom=None):
     ``unpacked_efficiency``).  ``packing_efficiency`` is the occupied
     fraction of all PE rows the schedule steps (1.0 = no dead rows);
     ``unpacked_efficiency`` is the same figure for the plain one-lane-
-    per-workload batch the packer replaces.
+    per-workload batch the packer replaces.  ``cycle_hints`` (measured
+    per-input-lane cycles from a prior run) replace the mesh-area
+    runtime proxy in the wave planner; ``parallel`` (the sharded
+    engine's device count) lets a wave carry that many super-lanes per
+    group, since supers on different devices do not couple makespans.
     """
     wls = list(workloads)
     geoms = _lane_geoms(wls)
     mode_list = _resolve_modes(modes, len(wls))
     if super_geom is None:
         super_geom = (max(w for w, _ in geoms), max(h for _, h in geoms))
-    waves = plan_waves(geoms, super_geom=super_geom, groups=mode_list)
+    waves = plan_waves(geoms, super_geom=super_geom, groups=mode_list,
+                       cycle_hints=cycle_hints, parallel=parallel)
     batches = [
         pack_workloads([wls[i] for i in wave],
                        modes=None if mode_list is None

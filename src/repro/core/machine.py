@@ -77,6 +77,22 @@ sequence.  Dissimilar-runtime lanes are serialized into waves
 engine; packed per-lane metrics are bit-identical to solo runs
 (tests/test_lane_packing.py).
 
+Multi-device lane sharding (scaling the lane axis)
+---------------------------------------------------
+Lanes are embarrassingly parallel — the vmapped cycle function never
+reads across the batch axis — so ``run_many(..., shard=True)`` splits
+the lane axis over ``jax.devices()`` with ``shard_map``: each device
+runs the chunked while-loop over its own B/D lanes (no cross-device
+sync per chunk) and per-lane metrics stay bit-identical to the
+unsharded and solo runs.  :func:`repro.core.batch.plan_shards` balances
+lanes across devices by the same runtime estimate the wave planner
+uses and pads B to a multiple of the device count with inert empty
+lanes.  The sharded engine is still ONE executable — per-lane
+``prog``/mode/geometry stay runtime data; only a real multi-device
+mesh keys a separate cache entry (``shard=True`` on one device reuses
+the plain engine).  Composes with ``pack=True``: each wave's
+super-lanes shard.
+
 What stays *static* (compile-time) in :class:`MachineConfig`: the padded
 PE-axis length, memory and queue capacities
 (``mem_words``/``queue_cap``/``stream_wait_cap``), and ``max_cycles`` —
@@ -1039,10 +1055,18 @@ def _engine_key_cfg(cfg: MachineConfig) -> MachineConfig:
     return cfg
 
 
-def _engine_key(cfg: MachineConfig, n_max: int, chunk: int) -> tuple:
-    """The full engine-cache key (exposed for tests)."""
-    return (_engine_key_cfg(cfg), int(n_max), chunk, PEND_CAP,
-            STREAM_THROTTLE)
+def _engine_key(cfg: MachineConfig, n_max: int, chunk: int,
+                n_devices: int = 1) -> tuple:
+    """The full engine-cache key (exposed for tests).
+
+    ``n_devices`` is 1 for the plain vmapped engine AND for
+    ``shard=True`` on a single-device host (the sharded path falls back
+    to the plain engine there, so opting into sharding never compiles a
+    second executable).  Only a real multi-device mesh — which changes
+    the partitioning of the executable — keys separately.
+    """
+    return (_engine_key_cfg(cfg), int(n_max), chunk, int(n_devices),
+            PEND_CAP, STREAM_THROTTLE)
 
 
 def clear_engine_cache() -> None:
@@ -1075,7 +1099,8 @@ def engine_cache_size() -> int:
     return len(_ENGINE_CACHE)
 
 
-def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None):
+def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
+                n_devices: int = 1):
     """Batched runner ``engine(prog, modes, geoms, sub_ids, local_ids, st)
     -> (st, overflowed, idle)``.
 
@@ -1095,9 +1120,19 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None):
 
     ``idle`` is returned per-PE ((B, N) bool, uniform within a sub-lane):
     callers read a sub-lane's completion off any of its PEs.
+
+    With ``n_devices > 1`` the whole engine body — chunked while-loop
+    included — is wrapped in ``shard_map`` over a 1-D ``("lanes",)``
+    device mesh: every argument and result splits on its leading lane
+    axis (``B`` must be a multiple of ``n_devices``; ``run_many`` pads
+    with inert lanes).  Lanes are fully independent (the vmapped step
+    never communicates across lanes), so each device loops until ITS
+    shard of lanes is idle — no cross-device sync per chunk, and
+    per-lane state transitions are the exact integer program of the
+    unsharded engine: sharded metrics are bit-identical.
     """
     n_max = cfg.n_pes if n_max is None else int(n_max)
-    key = _engine_key(cfg, n_max, chunk)
+    key = _engine_key(cfg, n_max, chunk, n_devices)
     eng = _ENGINE_CACHE.get(key)
     if eng is not None:
         return eng
@@ -1131,8 +1166,7 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None):
     step = jax.vmap(lane_step, in_axes=(0, 0, 0, 0, 0, 0))
     batch_idle = jax.vmap(lambda sub_id, s: group_idle(s, sub_id))
 
-    @functools.partial(jax.jit, donate_argnums=5)
-    def engine(prog, modes, geoms, sub_ids, local_ids, st):
+    def engine_fn(prog, modes, geoms, sub_ids, local_ids, st):
         def cond(carry):
             s, over = carry
             # a lane is live while any of its PEs still advances: its
@@ -1160,6 +1194,23 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None):
         over0 = jnp.zeros((st.cycle.shape[0],), jnp.bool_)
         st, over = jax.lax.while_loop(cond, body, (st, over0))
         return st, over, batch_idle(sub_ids, st)
+
+    if n_devices > 1:
+        from jax.sharding import PartitionSpec
+
+        from repro.jax_compat import make_mesh, shard_map_unchecked
+        # explicit device subset: the caller may shard over fewer
+        # devices than the host exposes (n_devices is capped at the
+        # batch size).
+        mesh = make_mesh((n_devices,), ("lanes",),
+                         devices=jax.devices()[:n_devices])
+        spec = PartitionSpec("lanes")
+        # A single spec per argument/result acts as a pytree prefix, so
+        # every MachineState leaf splits on its leading lane axis too.
+        engine_fn = shard_map_unchecked(
+            engine_fn, mesh, in_specs=(spec,) * 6,
+            out_specs=(spec, spec, spec))
+    engine = jax.jit(engine_fn, donate_argnums=5)
 
     _ENGINE_CACHE[key] = engine
     return engine
@@ -1207,7 +1258,9 @@ def _host_stats(st: MachineState) -> dict:
 
 def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
              chunk: int = 512, pack: bool = False,
-             super_geom=None, pack_stats: dict | None = None
+             super_geom=None, pack_stats: dict | None = None,
+             shard: bool = False, cycle_hints=None,
+             shard_stats: dict | None = None
              ) -> list[RunResult]:
     """Simulate B workloads in a single batched on-device run.
 
@@ -1247,6 +1300,25 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
       pack_stats: optional dict that ``pack=True`` fills with the
         schedule's ``n_waves`` / ``n_super_lanes`` /
         ``packing_efficiency`` / ``unpacked_efficiency``.
+      shard: split the lane axis over ``jax.devices()`` via
+        ``shard_map`` — lanes are embarrassingly parallel, so a B-lane
+        sweep runs B/D lanes per device with per-lane metrics
+        bit-identical to the unsharded (and solo) runs.  Lanes are
+        balanced across devices by :func:`repro.core.batch.plan_shards`
+        (mesh-area runtime proxy, or ``cycle_hints``) and the batch is
+        padded to a multiple of the device count with inert empty
+        lanes.  The device count is capped at the batch size (a device
+        needs at least one real lane).  On a single-device host this is
+        a no-op: the plain engine (same cache entry) runs unchanged.
+        Composes with ``pack=True`` by sharding each wave's
+        super-lanes.
+      cycle_hints: optional per-input-lane measured cycle counts (e.g.
+        ``[r.cycles for r in a_prior_run]``) replacing the mesh-area
+        runtime proxy in BOTH the wave planner (``pack=True``) and the
+        shard balancer (``shard=True``).
+      shard_stats: optional dict that ``shard=True`` fills with
+        ``n_devices`` / ``lanes_per_device`` / ``n_pad_lanes`` and the
+        per-device lane ``plan``.
 
     Returns:
       One :class:`RunResult` per lane, in input order — metrics are exactly
@@ -1275,14 +1347,41 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
             raise ValueError("pack=True places lanes itself; per-lane "
                              "geoms cannot be overridden")
         wls = list(workloads)
+        if cycle_hints is not None:
+            # validate eagerly: the wave planner's homogeneous-batch
+            # shortcut can skip shard_loads, and the per-wave hint
+            # aggregation below indexes by input lane.
+            from repro.core.batch import validate_hints
+            cycle_hints = validate_hints(cycle_hints, len(wls))
+        # A sharded schedule may run up to one super-lane per device
+        # side by side without coupling their makespans, so the wave
+        # planner gets the device count as its parallel width (capped
+        # at the lane count like the shard plan itself).
+        parallel = min(len(jax.devices()), len(wls)) if shard else 1
         batches, waves, stats = pack_schedule(wls, modes=modes,
-                                              super_geom=super_geom)
+                                              super_geom=super_geom,
+                                              cycle_hints=cycle_hints,
+                                              parallel=parallel)
         if pack_stats is not None:
             pack_stats.update(stats)
         results: list = [None] * len(wls)
+        wave_shard_stats: list[dict] = []
         for wb, wave in zip(batches, waves):
+            hints_w = None
+            if cycle_hints is not None:
+                # a super-lane runs for its slowest co-tenant, so its
+                # hint is the max over the sub-lanes it hosts (padded
+                # inert super-lanes keep 0).
+                hints_w = [0.0] * wb.batch
+                for p in wb.plan.placements:
+                    hints_w[p.super_lane] = max(
+                        hints_w[p.super_lane],
+                        float(cycle_hints[wave[p.lane]]))
+            ws: dict | None = {} if shard_stats is not None else None
             try:
-                wave_res = run_many(cfg, wb, chunk=chunk)
+                wave_res = run_many(cfg, wb, chunk=chunk, shard=shard,
+                                    cycle_hints=hints_w,
+                                    shard_stats=ws)
             except RuntimeError as e:
                 supers = getattr(e, "lanes", None)
                 if supers is None:
@@ -1295,8 +1394,21 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
                     "pending-FIFO overflow: consumption guarantee "
                     "violated (simulator invariant; packed input lanes "
                     f"{culprits})") from e
+            if ws is not None:
+                wave_shard_stats.append(ws)
             for i, r in zip(wave, wave_res):
                 results[i] = r
+        if shard_stats is not None:
+            # aggregate over waves (each wave shards independently):
+            # the headline numbers describe the widest wave, pads sum,
+            # and the full per-wave plans are kept.
+            shard_stats.update(
+                n_devices=max(w["n_devices"] for w in wave_shard_stats),
+                lanes_per_device=max(w["lanes_per_device"]
+                                     for w in wave_shard_stats),
+                n_pad_lanes=sum(w["n_pad_lanes"]
+                                for w in wave_shard_stats),
+                plan=[w["plan"] for w in wave_shard_stats])
         return results
     if not isinstance(workloads, BatchedWorkloads):
         workloads = stack_workloads(workloads, geoms=geoms)
@@ -1355,26 +1467,95 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
         local_ids = np.tile(np.arange(n_max, dtype=np.int32),
                             (workloads.batch, 1))
 
+    if cycle_hints is not None:
+        # validate regardless of device count: a malformed hints list
+        # must fail identically on a 1-device laptop and the forced-
+        # multi-device CI job (plan_shards only runs on the latter).
+        from repro.core.batch import validate_hints
+        cycle_hints = validate_hints(cycle_hints, workloads.batch)
+
+    # --- lane-axis device sharding ------------------------------------
+    # Lanes never interact, so the batch shards freely over devices: the
+    # plan balances real lanes by runtime estimate, the lane arrays are
+    # gathered into device-major order (inert all-zero 1x1 lanes — idle
+    # at cycle 0 — pad B to a multiple of the device count), and results
+    # are gathered back to input order below.  One device (or shard
+    # off): the plain engine, identical cache entry.  The device count
+    # is capped at the batch size — a device below one real lane could
+    # only step inert pads (and hosts that force absurd device counts,
+    # e.g. the 512 fake host devices repro.launch.dryrun installs for
+    # the LLM dry-runs, must not explode a small sweep into a 512-lane
+    # mesh).
+    n_dev = min(len(jax.devices()), workloads.batch) if shard else 1
+    order = inv = None
+    if shard and n_dev > 1:
+        from repro.core.batch import plan_shards, shard_loads
+        geom_list = [tuple(g) for g in lane_geoms]
+        loads = cycle_hints
+        if loads is None:
+            # the inverse-area proxy calls a 1x1 mesh the LONGEST lane,
+            # but a lane with nothing to inject (e.g. a wave-padding
+            # inert lane) is idle at cycle 0 — zero its load so the
+            # balancer spreads the real work instead.
+            work = np.asarray(workloads.amq_len).sum(axis=1)
+            loads = [0.0 if w == 0 else l
+                     for w, l in zip(work, shard_loads(geom_list))]
+        dev_plan = plan_shards(geom_list, n_dev, cycle_hints=loads)
+        order = [i for dev in dev_plan for i in dev]
+        inv = np.empty((workloads.batch,), np.int64)
+        for pos, lane in enumerate(order):
+            if lane >= 0:
+                inv[lane] = pos
+    if shard_stats is not None:
+        shard_stats.update(
+            n_devices=n_dev,
+            lanes_per_device=(len(order) // n_dev if order is not None
+                             else workloads.batch),
+            n_pad_lanes=(len(order) - workloads.batch
+                         if order is not None else 0),
+            plan=(dev_plan if order is not None
+                  else [list(range(workloads.batch))]))
+
+    def lanes(a, pad_row=None):
+        a = np.asarray(a, np.int32)
+        if order is None:
+            return jnp.asarray(a)
+        out = np.zeros((len(order),) + a.shape[1:], np.int32)
+        for pos, lane in enumerate(order):
+            if lane >= 0:
+                out[pos] = a[lane]
+            elif pad_row is not None:
+                out[pos] = pad_row
+        return jnp.asarray(out)
+
     st = jax.vmap(functools.partial(init_state, cfg))(
-        jnp.asarray(workloads.static_ams, jnp.int32),
-        jnp.asarray(workloads.amq_len, jnp.int32),
-        jnp.asarray(workloads.mem_val, jnp.int32),
-        jnp.asarray(workloads.mem_meta, jnp.int32))
-    engine = _get_engine(cfg, chunk, n_max)
-    st, over, idle = engine(jnp.asarray(workloads.prog, jnp.int32),
-                            jnp.asarray(lane_modes, jnp.int32),
-                            jnp.asarray(lane_geoms, jnp.int32),
-                            jnp.asarray(sub_ids, jnp.int32),
-                            jnp.asarray(local_ids, jnp.int32), st)
+        lanes(workloads.static_ams),
+        lanes(workloads.amq_len),
+        lanes(workloads.mem_val),
+        lanes(workloads.mem_meta))
+    engine = _get_engine(cfg, chunk, n_max,
+                         n_devices=n_dev if order is not None else 1)
+    st, over, idle = engine(
+        lanes(workloads.prog), lanes(lane_modes),
+        lanes(lane_geoms, pad_row=np.array([1, 1], np.int32)),
+        lanes(sub_ids),
+        lanes(local_ids, pad_row=np.arange(n_max, dtype=np.int32)), st)
     over = np.asarray(over)
+    idle = np.asarray(idle)                      # (B, N) per-PE group idle
+    host = _host_stats(st)
+    if inv is not None:
+        # gather back to input-lane order (drops the inert pad lanes):
+        # every downstream consumer — overflow naming, plan un-packing,
+        # per-lane slicing — indexes by input lane again.
+        over = over[inv]
+        idle = idle[inv]
+        host = {k: v[inv] for k, v in host.items()}
     if over.any():
         bad = np.nonzero(over)[0].tolist()
         err = RuntimeError("pending-FIFO overflow: consumption guarantee "
                            f"violated (simulator invariant; lanes {bad})")
         err.lanes = bad  # structured, so pack=True can name input lanes
         raise err
-    idle = np.asarray(idle)                      # (B, N) per-PE group idle
-    host = _host_stats(st)
     if workloads.plan is not None:
         # un-pack: one result per ORIGINAL lane, gathered from its
         # sub-mesh rectangle (plan order is input order by construction).

@@ -15,6 +15,28 @@ except ImportError:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across spellings.
+
+    The flag is ``check_rep`` on jax 0.4.x and ``check_vma`` on newer
+    top-level ``jax.shard_map``; releases that accept neither get the
+    bare call (their checker handles the body or there is no flag).
+    Used for per-shard-independent bodies (no collectives), where the
+    checker only costs trace time.
+    """
+    last_exc: TypeError | None = None
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+        except TypeError as e:
+            last_exc = e
+    # the bare final attempt passed no version-specific flag, so its
+    # TypeError is a genuine signature error — surface it, not a
+    # made-up "no spelling found".
+    raise last_exc
+
+
 def tpu_compiler_params(**kwargs):
     """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (old)."""
     from jax.experimental.pallas import tpu as pltpu
@@ -26,7 +48,15 @@ def tpu_compiler_params(**kwargs):
 def make_mesh(axis_shapes, axis_names, *, devices=None):
     """``jax.make_mesh`` with explicit Auto axis types where supported
     (``axis_types`` and ``jax.sharding.AxisType`` only exist on newer
-    jax; older releases treat every axis as Auto already)."""
+    jax; older releases treat every axis as Auto already).  Releases
+    below 0.4.35 predate ``jax.make_mesh`` entirely — there the mesh is
+    assembled directly from the device list."""
+    if not hasattr(jax, "make_mesh"):  # jax < 0.4.35
+        import numpy as np
+        devs = list(jax.devices()) if devices is None else list(devices)
+        n = int(np.prod(axis_shapes))
+        return jax.sharding.Mesh(
+            np.asarray(devs[:n]).reshape(axis_shapes), axis_names)
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
         try:

@@ -5,8 +5,20 @@ CI wires the persistent XLA compile cache through here: when
 actions/cache), every engine compile in the suite is served from / saved
 to disk, so a warm-cache CI run skips the expensive one-time compiles
 entirely.  Local runs are unaffected unless the variable is exported.
+
+Multi-device tests: the ``@pytest.mark.multidevice`` tier (the lane-
+sharding golden suite) needs more than one JAX device.  CPU-only hosts
+get them by *forcing* host devices BEFORE jax initializes::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 pytest tests/test_lane_sharding.py
+
+(the forced-multi-device CI job does exactly this).  When only one
+device is visible and forcing is off, marked tests auto-skip; the
+``n_devices`` fixture reports the session's device count either way.
 """
 import os
+
+import pytest
 
 
 def pytest_configure(config):
@@ -14,3 +26,28 @@ def pytest_configure(config):
     if path:
         from repro.core import machine
         machine.enable_persistent_compile_cache(os.path.expanduser(path))
+
+
+def _device_count() -> int:
+    import jax
+    return len(jax.devices())
+
+
+def pytest_collection_modifyitems(config, items):
+    if not any("multidevice" in item.keywords for item in items):
+        return  # don't initialize jax for suites that never need it
+    if _device_count() > 1:
+        return
+    skip = pytest.mark.skip(
+        reason="needs >1 JAX device — run under "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture(scope="session")
+def n_devices() -> int:
+    """Number of JAX devices this session can shard lanes over
+    (includes forced host devices)."""
+    return _device_count()

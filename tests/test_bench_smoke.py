@@ -122,6 +122,50 @@ def test_harness_grid_pack_opt_in():
         assert p["per_pe_busy"] == q["per_pe_busy"]
 
 
+def test_bench_ci_diff_labels_lanes():
+    """Golden / shard-leg drift reports must name each lane's
+    (workload, mode, size) coordinates next to both cycle counts —
+    never a bare value diff."""
+    from benchmarks.bench_ci import diff_cycles
+
+    # flat (workload, mode) grids — the smoke-golden shape
+    want = {"spmv": {"nexus": 100, "tia": 120}, "bfs": {"nexus": 40}}
+    got = {"spmv": {"nexus": 103, "tia": 120}, "bfs": {"nexus": 40}}
+    errs = diff_cycles(want, got)
+    assert len(errs) == 1
+    assert "spmv/nexus" in errs[0]
+    assert "golden=100" in errs[0] and "got=103" in errs[0]
+    assert "tia" not in errs[0] and "bfs" not in errs[0]
+
+    # nested size grids (fig17 / run_grid(sizes=) shapes) label the mesh
+    want = {"spmv": {"nexus": {"2x2": {"cycles": 10, "utilization": 0.5},
+                               "4x4": {"cycles": 5, "utilization": 0.5}}}}
+    got = {"spmv": {"nexus": {"2x2": {"cycles": 11, "utilization": 0.5},
+                              "4x4": {"cycles": 5, "utilization": 0.5}}}}
+    errs = diff_cycles(want, got, want_name="solo", got_name="sharded")
+    assert errs == ["cycle drift: spmv/nexus@2x2 solo=10 sharded=11"]
+
+    # asymmetric grids: missing and untracked lanes are named too
+    errs = diff_cycles({"spmv": {"nexus": 1}}, {"spmv": {"tia": 2}})
+    assert any("missing lane: spmv/nexus" in e for e in errs)
+    assert any("untracked grid point: spmv/tia" in e for e in errs)
+
+    assert diff_cycles(want, want) == []
+
+
+def test_check_golden_reports_labeled_drift(tmp_path, monkeypatch):
+    """check_golden routes through the labeled differ: a drifted smoke
+    grid names the lane, not just the numbers."""
+    from benchmarks import bench_ci
+    golden = tmp_path / "bench_smoke.json"
+    monkeypatch.setattr(bench_ci, "GOLDEN", str(golden))
+    smoke = {"grid": {"spmv": {"nexus": {"cycles": 50, "executed": 9}}}}
+    assert bench_ci.check_golden(smoke, update=True) == []
+    drifted = {"grid": {"spmv": {"nexus": {"cycles": 51, "executed": 9}}}}
+    errs = bench_ci.check_golden(drifted, update=False)
+    assert errs == ["cycle drift: spmv/nexus golden=50 got=51"]
+
+
 def test_fig_scripts_render_from_grid_slices(tiny_table, capsys):
     """Every paper-figure formatter consumes the grid table without
     crashing — including the n/a paths for archs the tiny grid omits

@@ -1,0 +1,368 @@
+"""Multi-device lane sharding: planner invariants + golden equivalence.
+
+The shard planner (repro.core.batch.plan_shards) assigns lanes to
+devices for the lane-axis ``shard_map`` engine; the property tests pin
+its contract: every lane assigned exactly once, every device carries the
+same lane count (inert ``-1`` pads fill the remainder), the plan is
+deterministic, and its load balance — by the mesh-area runtime proxy or
+by measured ``cycle_hints`` — is never worse than a round-robin deal.
+
+The golden suite pins the execution contract under forced host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``; the
+``multidevice`` marker auto-skips on single-device hosts): a sharded
+(workload x mode x size) grid is bit-identical to the unsharded batch
+AND to per-lane solo runs — cycles, per-PE busy/stall, memory results —
+with exactly ONE compiled engine, including the shard x pack
+composition and inert-lane padding of non-divisible batches.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import batch, compiler, machine
+from repro.core.machine import MachineConfig
+from repro.testing import given, settings, strategies as st
+
+RNG = np.random.default_rng(33)
+SIZES = [(2, 2), (3, 3), (4, 4)]
+
+
+def _cfg(w=4, h=4, **kw):
+    kw.setdefault("mem_words", 1024)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(width=w, height=h, **kw)
+
+
+def _sig(r):
+    return (r.cycles, r.executed, r.enroute, r.hops, r.injected,
+            r.completed, r.utilization, r.busy_frac, r.enroute_frac,
+            tuple(np.asarray(r.per_pe_busy).tolist()),
+            tuple(np.asarray(r.stall_per_port).ravel().tolist()))
+
+
+def _solo(cfg, wl):
+    return machine.run(cfg, wl.prog, wl.static_ams, wl.amq_len, wl.mem_val,
+                       wl.mem_meta)
+
+
+@pytest.fixture(scope="module")
+def per_size():
+    """One SpMV + one BFS per mesh size (placement is size-dependent)."""
+    from benchmarks.workloads import small_world_graph
+    a = compiler.random_sparse(14, 14, 0.35, RNG)
+    x = RNG.integers(-4, 5, size=(14,))
+    rp, col = small_world_graph(20, 4, 3)
+    out = {}
+    for (w, h) in SIZES:
+        cfg = _cfg(w, h)
+        out[w, h] = cfg, {
+            "spmv": compiler.build_spmv(a, x, cfg),
+            "bfs": compiler.build_bfs(rp, col, 0, cfg),
+        }
+    return out
+
+
+# ----------------------------------------------------------------------------
+# planner properties
+# ----------------------------------------------------------------------------
+def _rr_plan(b, n_dev):
+    return [[i for i in range(b) if i % n_dev == d] for d in range(n_dev)]
+
+
+def _makespan(plan, load):
+    return max(sum(load[i] for i in dev if i >= 0) for dev in plan)
+
+
+def _check_shard_plan(geoms, n_dev, plan, cycle_hints=None):
+    """Assert every structural invariant of a shard plan."""
+    b = len(geoms)
+    cap = -(-b // n_dev)
+    assert len(plan) == n_dev, "one lane list per device"
+    assert all(len(dev) == cap for dev in plan), "per-device B equal"
+    real = sorted(i for dev in plan for i in dev if i >= 0)
+    assert real == list(range(b)), "every lane assigned exactly once"
+    n_pads = sum(1 for dev in plan for i in dev if i < 0)
+    assert n_pads == n_dev * cap - b, "pads fill exactly the remainder"
+    load = batch.shard_loads(geoms, cycle_hints)
+    assert _makespan(plan, load) <= \
+        _makespan(_rr_plan(b, n_dev), load) + 1e-9, \
+        "balance must never be worse than round-robin"
+    assert plan == batch.plan_shards(geoms, n_dev,
+                                     cycle_hints=cycle_hints), \
+        "plan must be deterministic"
+
+
+def test_shard_plan_invariants_seeded_sweep():
+    """Deterministic fallback for environments without hypothesis."""
+    rng = np.random.default_rng(11)
+    for _ in range(200):
+        n = int(rng.integers(1, 17))
+        geoms = [(int(rng.integers(1, 9)), int(rng.integers(1, 9)))
+                 for _ in range(n)]
+        n_dev = int(rng.integers(1, 6))
+        hints = (rng.integers(0, 5000, size=n).tolist()
+                 if rng.random() < 0.5 else None)
+        plan = batch.plan_shards(geoms, n_dev, cycle_hints=hints)
+        _check_shard_plan(geoms, n_dev, plan, hints)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 8), st.integers(1, 8)),
+                min_size=1, max_size=16),
+       st.integers(1, 5),
+       st.lists(st.integers(0, 5000), min_size=16, max_size=16),
+       st.booleans())
+def test_shard_plan_invariants_property(geoms, n_dev, hint_pool, hinted):
+    hints = hint_pool[:len(geoms)] if hinted else None
+    plan = batch.plan_shards(geoms, n_dev, cycle_hints=hints)
+    _check_shard_plan(geoms, n_dev, plan, hints)
+
+
+def test_shard_plan_spreads_long_lanes():
+    """The proxy says smaller mesh = longer run, so the two 2x2 lanes
+    must land on different devices (round-robin by input order would
+    pair them)."""
+    plan = batch.plan_shards([(2, 2), (2, 2), (8, 8), (8, 8)], 2)
+    for dev in plan:
+        assert len([i for i in dev if i in (0, 1)]) == 1
+
+
+def test_shard_plan_validates():
+    with pytest.raises(ValueError, match="empty"):
+        batch.plan_shards([], 2)
+    with pytest.raises(ValueError, match="device"):
+        batch.plan_shards([(2, 2)], 0)
+    with pytest.raises(ValueError, match="hints"):
+        batch.shard_loads([(2, 2)], [1, 2])
+    with pytest.raises(ValueError, match="non-negative"):
+        batch.shard_loads([(2, 2)], [-1])
+
+
+# ----------------------------------------------------------------------------
+# cycle hints: the measured-runtime oracle reorders both planners
+# ----------------------------------------------------------------------------
+def test_cycle_hints_reorder_shard_plan():
+    """Equal-area lanes carry no area signal, so the no-hint plan deals
+    by index; measured hints re-pair the two slow lanes apart."""
+    geoms = [(4, 4)] * 4
+    plain = batch.plan_shards(geoms, 2)
+    hinted = batch.plan_shards(geoms, 2, cycle_hints=[100, 90, 1, 1])
+    assert plain != hinted
+    # the two long lanes (hints 100 and 90) must not share a device
+    dev_of = {i: d for d, dev in enumerate(hinted) for i in dev if i >= 0}
+    assert dev_of[0] != dev_of[1]
+    load = batch.shard_loads(geoms, [100, 90, 1, 1])
+    assert _makespan(hinted, load) <= _makespan(plain, load)
+
+
+def test_cycle_hints_reorder_waves():
+    """A dissimilar (mixed-size) batch: without hints the wave planner
+    fills the first wave with the first four small lanes; measured
+    hints naming lanes 4 and 5 as the long-runners pull them into the
+    first wave instead (co-tenanted with short lanes of equal mesh)."""
+    geoms = [(2, 2)] * 6 + [(4, 4)]
+    plain = batch.plan_waves(geoms)
+    assert plain == [[0, 1, 2, 3], [4, 5], [6]]
+    hinted = batch.plan_waves(geoms,
+                              cycle_hints=[1, 1, 1, 1, 100, 100, 50])
+    assert hinted != plain
+    assert sorted(hinted[0]) == [0, 1, 4, 5]
+    # structural contract is preserved: every lane in exactly one wave
+    assert sorted(sum(hinted, [])) == list(range(len(geoms)))
+
+
+def test_parallel_width_merges_waves():
+    """Sequential waves exist because co-scheduled supers in ONE device
+    call step the wave's max makespan; with D devices a wave may carry D
+    supers per group (one per device, no coupling), so the fig17-shaped
+    schedule collapses from 4 waves to 1.  parallel=1 (the unsharded
+    default) must reproduce the old plan exactly."""
+    geoms = [(2, 2)] * 3 + [(4, 4)] * 3 + [(8, 8)] * 3
+    plain = batch.plan_waves(geoms, super_geom=(8, 8))
+    assert plain == [[0, 1, 2, 3, 4, 5], [6], [7], [8]]
+    merged = batch.plan_waves(geoms, super_geom=(8, 8), parallel=4)
+    assert merged == [[0, 1, 2, 3, 4, 5, 6, 7, 8]]
+    # a narrower width merges partially, never dropping a lane
+    two = batch.plan_waves(geoms, super_geom=(8, 8), parallel=2)
+    assert 1 < len(two) < len(plain)
+    assert sorted(sum(two, [])) == list(range(len(geoms)))
+
+
+def test_cycle_hints_split_homogeneous_waves():
+    """Same-size lanes carry zero area signal (one wave by default),
+    but measured hints DO carry one: lanes split at factor-of-2 runtime
+    boundaries so short lanes stop stepping dead rows inside a long
+    wave."""
+    geoms = [(4, 4)] * 4
+    assert batch.plan_waves(geoms) == [[0, 1, 2, 3]]
+    hinted = batch.plan_waves(geoms, cycle_hints=[100, 100, 1, 1])
+    assert hinted == [[0, 1], [2, 3]]
+    # near-equal hints keep the single wave (no needless serialization)
+    assert batch.plan_waves(geoms, cycle_hints=[100, 99, 60, 51]) == \
+        [[0, 1, 2, 3]]
+    # sharded schedules skip the split: plan_shards consumes the same
+    # hints and devices terminate independently, so serializing would
+    # only add dispatches
+    assert batch.plan_waves(geoms, cycle_hints=[100, 100, 1, 1],
+                            parallel=4) == [[0, 1, 2, 3]]
+
+
+def test_cycle_hints_validated_on_every_path(per_size):
+    """A malformed hints list must fail identically with and without
+    sharding, packing, or a multi-device host (plan_shards only runs on
+    the latter)."""
+    wl = per_size[2, 2][1]["spmv"]
+    for kw in (dict(shard=True), dict(pack=True), {}):
+        with pytest.raises(ValueError, match="cycle hints"):
+            machine.run_many(_cfg(2, 2), [wl, wl], cycle_hints=[5], **kw)
+        with pytest.raises(ValueError, match="non-negative"):
+            machine.run_many(_cfg(2, 2), [wl, wl], cycle_hints=[5, -1],
+                             **kw)
+
+
+def test_cycle_hints_do_not_change_metrics(per_size):
+    """Hints only re-plan waves/shards — per-lane metrics stay
+    bit-identical (the schedule is accounting, not semantics)."""
+    wls = [per_size[size][1][name]
+           for size in SIZES for name in ("spmv", "bfs")]
+    plain = machine.run_many(_cfg(), wls, pack=True)
+    hints = [r.cycles for r in plain]
+    replanned = machine.run_many(_cfg(), wls, pack=True,
+                                 cycle_hints=hints)
+    for p, r in zip(plain, replanned):
+        assert _sig(p) == _sig(r)
+
+
+# ----------------------------------------------------------------------------
+# inert pad lanes
+# ----------------------------------------------------------------------------
+def test_inert_lane_is_metrics_inert(per_size):
+    """The pad lane the shard path appends — an all-zero 1x1 workload —
+    runs zero cycles, touches zero statistics, and leaves its co-batched
+    real lane bit-identical to its solo run."""
+    cfg, by = per_size[2, 2]
+    wl = by["spmv"]
+    wb = batch.stack_workloads([wl, wl])
+    for name in ("prog", "static_ams", "amq_len", "mem_val", "mem_meta"):
+        getattr(wb, name)[1] = 0
+    wb.geoms[1] = (1, 1)
+    real, pad = machine.run_many(_cfg(2, 2), wb)
+    assert pad.cycles == 0 and pad.executed == 0 and pad.hops == 0
+    assert pad.injected == 0 and pad.completed
+    assert _sig(real) == _sig(_solo(cfg, wl))
+    assert wl.check(real.mem_val)
+
+
+# ----------------------------------------------------------------------------
+# golden equivalence: sharded == unsharded == solo, bit for bit
+# ----------------------------------------------------------------------------
+@pytest.mark.multidevice
+def test_sharded_grid_matches_unsharded_and_solo(per_size, n_devices):
+    """The full workload x mode x size grid, lane axis sharded over the
+    forced host devices: ONE compiled engine, every lane bit-identical
+    to the unsharded batch and to its solo run (cycles, per-PE
+    busy/stall, memory results)."""
+    points = [(size, name, mode)
+              for size in SIZES for name in ("spmv", "bfs")
+              for mode in machine.FABRIC_MODES]
+    wls = [per_size[size][1][name] for size, name, _ in points]
+    modes = [mode for _, _, mode in points]
+    stats: dict = {}
+    machine.clear_engine_cache()
+    sharded = machine.run_many(_cfg(), wls, modes=modes, shard=True,
+                               shard_stats=stats)
+    assert machine.engine_cache_size() == 1, \
+        "the sharded grid must compile exactly one engine"
+    assert stats["n_devices"] == n_devices > 1
+    assert stats["lanes_per_device"] * n_devices == \
+        len(wls) + stats["n_pad_lanes"]
+    unsharded = machine.run_many(_cfg(), wls, modes=modes)
+    for (size, name, mode), r_sh, r_un in zip(points, sharded, unsharded):
+        assert _sig(r_sh) == _sig(r_un), (size, name, mode)
+        np.testing.assert_array_equal(
+            np.asarray(r_sh.mem_val), np.asarray(r_un.mem_val),
+            err_msg=f"{size}/{name}/{mode}")
+        cfg = dataclasses.replace(per_size[size][0],
+                                  **machine.mode_flags(mode))
+        s = _solo(cfg, per_size[size][1][name])
+        assert _sig(s) == _sig(r_sh), (size, name, mode)
+        np.testing.assert_array_equal(
+            np.asarray(s.mem_val),
+            np.asarray(r_sh.mem_val)[:, :s.mem_val.shape[1]],
+            err_msg=f"{size}/{name}/{mode}")
+        assert per_size[size][1][name].check(r_sh.mem_val)
+
+
+@pytest.mark.multidevice
+def test_sharded_odd_batch_pads_inertly(per_size, n_devices):
+    """A lane count not divisible by the device count: inert pad lanes
+    fill the remainder and every real lane still matches its solo run."""
+    b = n_devices + 1  # guarantees padding on any forced device count
+    wls = ([per_size[size][1]["spmv"] for size in SIZES] * 3)[:b]
+    sizes = (SIZES * 3)[:b]
+    stats: dict = {}
+    res = machine.run_many(_cfg(), wls, shard=True, shard_stats=stats)
+    assert stats["n_pad_lanes"] == n_devices - 1
+    for size, wl, r in zip(sizes, wls, res):
+        assert _sig(r) == _sig(_solo(per_size[size][0], wl)), size
+        assert wl.check(r.mem_val)
+
+
+@pytest.mark.multidevice
+def test_shard_device_count_caps_at_batch(per_size, n_devices):
+    """Fewer lanes than devices: the mesh shrinks to one device per
+    lane instead of padding the batch up to the host's device count
+    (repro.launch.dryrun forces 512 fake host devices — a 2-lane sweep
+    must not become a 512-lane mesh)."""
+    wls = [per_size[2, 2][1]["spmv"], per_size[4, 4][1]["spmv"]]
+    stats: dict = {}
+    res = machine.run_many(_cfg(), wls, shard=True, shard_stats=stats)
+    assert stats["n_devices"] == 2
+    assert stats["lanes_per_device"] == 1 and stats["n_pad_lanes"] == 0
+    for (w, h), wl, r in zip([(2, 2), (4, 4)], wls, res):
+        assert _sig(r) == _sig(_solo(per_size[w, h][0], wl))
+
+
+@pytest.mark.multidevice
+def test_shard_composes_with_pack(per_size, n_devices):
+    """shard x pack: each wave's super-lanes split over devices; packed
+    sharded metrics equal packed solo metrics equal plain solo runs."""
+    points = [(size, name, mode)
+              for size in SIZES for name in ("spmv", "bfs")
+              for mode in machine.FABRIC_MODES]
+    wls = [per_size[size][1][name] for size, name, _ in points]
+    modes = [mode for _, _, mode in points]
+    stats: dict = {}
+    both = machine.run_many(_cfg(), wls, modes=modes, pack=True,
+                            shard=True, shard_stats=stats)
+    # per-wave device count: capped at the wave's own super-lane count
+    assert 1 <= stats["n_devices"] <= n_devices
+    packed = machine.run_many(_cfg(), wls, modes=modes, pack=True)
+    for (size, name, mode), r_b, r_p in zip(points, both, packed):
+        assert _sig(r_b) == _sig(r_p), (size, name, mode)
+    # spot-check one point against its solo run
+    cfg = dataclasses.replace(per_size[3, 3][0],
+                              **machine.mode_flags("tia"))
+    s = _solo(cfg, per_size[3, 3][1]["spmv"])
+    i = points.index(((3, 3), "spmv", "tia"))
+    assert _sig(s) == _sig(both[i])
+
+
+def test_shard_on_one_device_is_plain_engine(per_size, n_devices):
+    """shard=True never changes results, and on a single-device host it
+    is a strict no-op: the plain engine's cache entry is reused (no
+    second executable)."""
+    wls = [per_size[size][1]["spmv"] for size in SIZES]
+    plain = machine.run_many(_cfg(), wls)
+    before = machine.engine_cache_size()
+    stats: dict = {}
+    sharded = machine.run_many(_cfg(), wls, shard=True, shard_stats=stats)
+    for p, s in zip(plain, sharded):
+        assert _sig(p) == _sig(s)
+    assert stats["n_devices"] == min(n_devices, len(wls))
+    if n_devices == 1:
+        assert machine.engine_cache_size() == before, \
+            "single-device shard=True must reuse the plain engine"
+        assert stats["lanes_per_device"] == len(wls)
+        assert stats["n_pad_lanes"] == 0
