@@ -22,6 +22,13 @@ the sharded leg degrades to the plain engine, so the line doubles as an
 honest no-op measurement; the forced-multi-device CI job exercises it
 for real.
 
+Both artifacts additionally carry a ``service`` leg: the same traffic
+through the resident :class:`repro.serve.SweepService` (continuous
+batching — mid-wave refill of retired sub-lane rectangles on the one
+warm engine) vs sequential blocking per-lane ``run_many`` calls,
+recording steady-state lanes/s both ways plus the service's refill
+occupancy (see :mod:`benchmarks.serve_bench`).
+
 Perf-regression gates (exit 1 on violation):
 
   * the smoke grid's per-lane cycle counts must equal the checked-in
@@ -38,7 +45,12 @@ Perf-regression gates (exit 1 on violation):
   * the fig17 sweep's ``packing_efficiency`` must be at least the
     unpacked baseline's occupied/padded fraction — less means the packer
     stopped co-tenanting small meshes and the padded PE axis is dead
-    cost again.
+    cost again;
+  * the service legs must be bit-identical to their sequential
+    baselines on one compiled engine, and on the dissimilar-runtime
+    fig17 traffic the service's steady-state throughput must not drop
+    below sequential ``run_many`` — less means continuous batching
+    stopped paying for its scheduling overhead.
 
     PYTHONPATH=src python -m benchmarks.bench_ci --out experiments/ci
     PYTHONPATH=src python -m benchmarks.bench_ci --update-golden
@@ -170,17 +182,15 @@ def run_smoke() -> dict:
             for i, wl in enumerate(wls)
         }
 
-    shard_stats: dict = {}
     # cold-vs-cold: the solo leg above paid its engine compile, so the
     # sharded leg starts from a fresh cache too — otherwise a 1-device
     # host (where shard reuses the very same engine) would record its
     # warm rerun as a phantom shard speedup.
     machine.clear_engine_cache()
     t0 = time.time()
-    grid_sh = harness.run_grid(wls,
-                               base_cfg=MachineConfig(width=2, height=2),
-                               max_cycles=100_000, shard=True,
-                               shard_stats=shard_stats)
+    grid_sh, report_sh = harness.run_grid_report(
+        wls, base_cfg=MachineConfig(width=2, height=2),
+        max_cycles=100_000, shard=True)
     wall_sh = time.time() - t0
     engines_shard = machine.engine_cache_size()
     table = table_of(grid)
@@ -189,8 +199,8 @@ def run_smoke() -> dict:
     n_lanes = len(wls) * len(grid)
     return dict(meta=_meta(), wall_s=round(wall, 3),
                 wall_shard_s=round(wall_sh, 3),
-                n_devices=shard_stats["n_devices"],
-                lanes_per_device=shard_stats["lanes_per_device"],
+                n_devices=report_sh.shard.n_devices,
+                lanes_per_device=report_sh.shard.lanes_per_device,
                 shard_drift=shard_drift,
                 engine_cache_size=engines_solo,
                 engine_cache_size_shard=engines_shard,
@@ -207,18 +217,15 @@ def run_fig17() -> dict:
     from benchmarks import fig17_scaling
     from repro.core import machine
     machine.clear_engine_cache()
-    pack_stats: dict = {}
     t0 = time.time()
-    data = fig17_scaling.run_grid(fig17_scaling._builders(),
-                                  pack_stats=pack_stats)
+    data, report = fig17_scaling.run_grid_report(fig17_scaling._builders())
     wall = time.time() - t0
     engines_solo = machine.engine_cache_size()
-    shard_stats: dict = {}
     # cold-vs-cold, like run_smoke: both legs pay their own compile.
     machine.clear_engine_cache()
     t0 = time.time()
-    data_sh = fig17_scaling.run_grid(fig17_scaling._builders(),
-                                     shard=True, shard_stats=shard_stats)
+    data_sh, report_sh = fig17_scaling.run_grid_report(
+        fig17_scaling._builders(), shard=True)
     wall_sh = time.time() - t0
     engines_shard = machine.engine_cache_size()
     shard_drift = diff_cycles(data, data_sh,
@@ -226,16 +233,36 @@ def run_fig17() -> dict:
     n_lanes = sum(len(v) for v in data.values())
     return dict(meta=_meta(), wall_s=round(wall, 3),
                 wall_shard_s=round(wall_sh, 3),
-                n_devices=shard_stats["n_devices"],
-                lanes_per_device=shard_stats["lanes_per_device"],
+                n_devices=report_sh.shard.n_devices,
+                lanes_per_device=report_sh.shard.lanes_per_device,
                 shard_drift=shard_drift,
                 engine_cache_size=engines_solo,
                 engine_cache_size_shard=engines_shard,
                 lanes_per_engine=n_lanes / engines_solo,
-                packing_efficiency=pack_stats["packing_efficiency"],
-                unpacked_efficiency=pack_stats["unpacked_efficiency"],
-                n_waves=pack_stats["n_waves"],
+                packing_efficiency=report.pack.packing_efficiency,
+                unpacked_efficiency=report.pack.unpacked_efficiency,
+                n_waves=report.pack.n_waves,
                 grid=data)
+
+
+def run_service(traffic: str) -> dict:
+    """The continuous-batching leg: the same traffic through the
+    resident :class:`repro.serve.SweepService` (steady state, warm
+    engine) vs sequential blocking per-lane ``run_many`` calls — see
+    :mod:`benchmarks.serve_bench`.  Records steady-state lanes/s both
+    ways, the speedup, and the service's mid-wave refill occupancy;
+    results are checked bit-identical before anything is reported."""
+    from benchmarks import serve_bench
+    if traffic == "fig17":
+        # fine slices (128-cycle chunks, retire/refill between every
+        # chunk) are the service's throughput lever on this traffic:
+        # every lane finishes in well under one default 512-cycle
+        # chunk, which each blocking call pays in full.
+        cfg, lanes = serve_bench.fig17_traffic(copies=2)
+        return serve_bench.service_throughput(
+            cfg, lanes, chunk=128, slice_chunks=1, label=traffic)
+    cfg, lanes = serve_bench.smoke_traffic(copies=2)
+    return serve_bench.service_throughput(cfg, lanes, label=traffic)
 
 
 def check_golden(smoke: dict, update: bool) -> list[str]:
@@ -280,6 +307,7 @@ def main() -> int:
     failures: list[str] = []
 
     smoke = run_smoke()
+    smoke["service"] = run_service("smoke")
     with open(os.path.join(args.out, "BENCH_fig11.json"), "w") as f:
         json.dump(smoke, f, indent=1)
     print(f"smoke grid: wall={smoke['wall_s']}s "
@@ -296,9 +324,20 @@ def main() -> int:
                         "(want 1): the sharded path silently recompiled")
     failures += check_golden(smoke, args.update_golden)
     failures += [f"smoke shard leg: {msg}" for msg in smoke["shard_drift"]]
+    svc = smoke["service"]
+    print(f"smoke service leg: sequential {svc['seq_lanes_per_s']} lanes/s, "
+          f"service {svc['service_lanes_per_s']} lanes/s "
+          f"({svc['speedup']:.2f}x), refill occupancy "
+          f"{svc['refill_occupancy']:.2f}")
+    failures += [f"smoke service leg: {msg}" for msg in svc["drift"]]
+    if svc["engine_cache_size"] != 1:
+        failures.append("smoke service leg compiled "
+                        f"{svc['engine_cache_size']} engines (want 1): "
+                        "the service arena stopped hitting the cache")
 
     if not args.skip_fig17:
         fig17 = run_fig17()
+        fig17["service"] = run_service("fig17")
         with open(os.path.join(args.out, "BENCH_fig17.json"), "w") as f:
             json.dump(fig17, f, indent=1)
         print(f"fig17 sweep: wall={fig17['wall_s']}s "
@@ -327,6 +366,26 @@ def main() -> int:
                 f"{fig17['packing_efficiency']:.3f} fell below the "
                 f"unpacked baseline {fig17['unpacked_efficiency']:.3f}: "
                 "the packer stopped co-tenanting small meshes")
+        svc17 = fig17["service"]
+        print(f"fig17 service leg: sequential {svc17['seq_lanes_per_s']} "
+              f"lanes/s, service {svc17['service_lanes_per_s']} lanes/s "
+              f"({svc17['speedup']:.2f}x), refill occupancy "
+              f"{svc17['refill_occupancy']:.2f}, {svc17['n_refills']} "
+              "mid-wave refills")
+        failures += [f"fig17 service leg: {msg}" for msg in svc17["drift"]]
+        if svc17["engine_cache_size"] != 1:
+            failures.append("fig17 service leg compiled "
+                            f"{svc17['engine_cache_size']} engines "
+                            "(want 1): the service arena stopped hitting "
+                            "the cache")
+        if svc17["speedup"] < 1.0:
+            failures.append(
+                "fig17 service throughput "
+                f"{svc17['service_lanes_per_s']} lanes/s fell below the "
+                f"sequential run_many baseline "
+                f"{svc17['seq_lanes_per_s']} lanes/s "
+                f"({svc17['speedup']:.2f}x): continuous batching stopped "
+                "paying for itself")
 
     if failures:
         print("\nPERF-REGRESSION GATE FAILED:", file=sys.stderr)

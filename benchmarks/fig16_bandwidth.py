@@ -18,7 +18,7 @@ dense-equivalent throughput rises ≈16×.
 
 ``--simulate`` cross-checks the model's sparsity axis on the cycle-level
 fabric: the whole sparsity grid runs as ONE batched device call
-(machine.run_many), and the measured output densities / op counts are
+(one packed sweep), and the measured output densities / op counts are
 compared against the analytic ``d_out`` / ``ops`` terms.
 """
 from __future__ import annotations
@@ -64,7 +64,7 @@ def simulate_sparsity_axis(n: int = 24, seed: int = 13, *,
     """Validate the analytic sparsity terms against the simulator.
 
     Builds one small SpMSpM per sparsity level and runs the whole grid
-    through the packed ``run_many`` path — one call, one compiled
+    through the packed sweep path — one call, one compiled
     engine, the sparsity points co-scheduled by the sub-mesh lane packer
     (same-size meshes here, so the packer's value is the shared engine
     and schedule; mixed-size callers get sub-mesh co-tenancy for free).
@@ -73,8 +73,9 @@ def simulate_sparsity_axis(n: int = 24, seed: int = 13, *,
     ``shard=True`` (the ``--shard`` leg) splits the sparsity lanes over
     ``jax.devices()`` — bit-identical, a no-op on one device.
     """
-    from repro.core import compiler, machine
+    from repro.core import compiler
     from repro.core.machine import MachineConfig
+    from repro.core.sweep import SweepRequest, sweep
 
     rng = np.random.default_rng(seed)
     sparsities = list(sparsities)
@@ -86,14 +87,14 @@ def simulate_sparsity_axis(n: int = 24, seed: int = 13, *,
         b = compiler.random_sparse(n, n, d, rng)
         wls.append(compiler.build_spmspm(a, b, cfg))
         dens.append(d)
-    shard_stats: dict = {}
-    results = machine.run_many(cfg, wls, pack=True, shard=shard,
-                               shard_stats=shard_stats if shard else None)
+    report = sweep(cfg, SweepRequest(workloads=wls, pack=True,
+                                     shard=shard))
+    results = report.lanes
 
     print("-" * 78)
     print("simulated cross-check (batched sweep, one device call): "
           f"SpMSpM n={n}" + (
-              f", sharded over {shard_stats['n_devices']} device(s)"
+              f", sharded over {report.shard.n_devices} device(s)"
               if shard else ""))
     print(f"{'sparsity':<10}{'d_out model':>12}{'d_out sim':>12}"
           f"{'executed':>10}{'cycles':>8}")

@@ -31,6 +31,7 @@ import numpy as np
 from benchmarks.workloads import powerlaw_sparse, small_world_graph
 from repro.core import compiler, machine
 from repro.core.machine import MachineConfig
+from repro.core.sweep import SweepReport, SweepRequest, sweep
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench",
                    "fig17.json")
@@ -69,29 +70,35 @@ def build_grid(builders, sizes=SIZES):
 
 
 def run_grid(builders, sizes=SIZES, *, pack: bool = True,
-             pack_stats: dict | None = None, shard: bool = False,
-             shard_stats: dict | None = None) -> dict:
-    """The entire sizes x workloads grid in ONE packed ``run_many`` call.
+             shard: bool = False) -> dict:
+    """The Fig. 17 table alone; see :func:`run_grid_report` for the
+    table plus the sweep's packing / sharding schedules."""
+    table, _ = run_grid_report(builders, sizes, pack=pack, shard=shard)
+    return table
 
-    Returns {workload: {"WxH": {cycles, utilization}}} — the Fig. 17
-    table — after asserting every lane completed bit-exact.  With
-    ``pack`` (default) small meshes are co-scheduled inside shared
-    padded super-lanes; ``pack_stats`` receives the packing-efficiency
-    numbers.  ``shard=True`` additionally splits each wave's lane axis
-    over ``jax.devices()`` (bit-identical; a no-op on one device), with
-    ``shard_stats`` receiving ``n_devices`` / ``lanes_per_device``.
+
+def run_grid_report(builders, sizes=SIZES, *, pack: bool = True,
+                    shard: bool = False) -> tuple[dict, SweepReport]:
+    """The entire sizes x workloads grid in ONE packed sweep call.
+
+    Returns ``(table, report)``: {workload: {"WxH": {cycles,
+    utilization}}} — the Fig. 17 table — after asserting every lane
+    completed bit-exact, plus the :class:`SweepReport` whose ``pack`` /
+    ``shard`` fields carry the packing-efficiency numbers and device
+    plan.  With ``pack`` (default) small meshes are co-scheduled inside
+    shared padded super-lanes; ``shard=True`` additionally splits each
+    wave's lane axis over ``jax.devices()`` (bit-identical; a no-op on
+    one device).
     """
     lanes = build_grid(builders, sizes)
-    results = machine.run_many(_size_cfg(*sizes[0]),
-                               [wl for _, _, wl in lanes], pack=pack,
-                               pack_stats=pack_stats, shard=shard,
-                               shard_stats=shard_stats)
+    report = sweep(_size_cfg(*sizes[0]), SweepRequest(
+        workloads=[wl for _, _, wl in lanes], pack=pack, shard=shard))
     out: dict = {name: {} for name in builders}
-    for ((w, h), name, wl), r in zip(lanes, results):
+    for ((w, h), name, wl), r in zip(lanes, report):
         assert r.completed and wl.check(r.mem_val), f"{name} @ {w}x{h}"
         out[name][f"{w}x{h}"] = dict(cycles=r.cycles,
                                      utilization=r.utilization)
-    return out
+    return out, report
 
 
 def bench_smoke(sizes=SIZES) -> dict:
@@ -206,30 +213,28 @@ def bench() -> dict:
     grid = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes])
     t_warm = time.time() - t0
 
-    pack_stats: dict = {}
+    pack_req = SweepRequest(workloads=[wl for _, _, wl in lanes], pack=True)
     machine.clear_engine_cache()
     t0 = time.time()
-    packed = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes],
-                              pack=True, pack_stats=pack_stats)
+    packed_rep = sweep(_size_cfg(2, 2), pack_req)
     t_pack_cold = time.time() - t0
     n_pack_engines = machine.engine_cache_size()
     t0 = time.time()
-    packed = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes],
-                              pack=True)
+    packed_rep = sweep(_size_cfg(2, 2), pack_req)
     t_pack_warm = time.time() - t0
+    packed, pack_stats = packed_rep.lanes, packed_rep.pack
 
-    shard_stats: dict = {}
+    shard_req = SweepRequest(workloads=[wl for _, _, wl in lanes],
+                             pack=True, shard=True)
     machine.clear_engine_cache()
     t0 = time.time()
-    sharded = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes],
-                               pack=True, shard=True,
-                               shard_stats=shard_stats)
+    sharded_rep = sweep(_size_cfg(2, 2), shard_req)
     t_shard_cold = time.time() - t0
     n_shard_engines = machine.engine_cache_size()
     t0 = time.time()
-    sharded = machine.run_many(_size_cfg(2, 2), [wl for _, _, wl in lanes],
-                               pack=True, shard=True)
+    sharded_rep = sweep(_size_cfg(2, 2), shard_req)
     t_shard_warm = time.time() - t0
+    sharded, shard_stats = sharded_rep.lanes, sharded_rep.shard
 
     # per-lane metrics identical between all four paths
     it = iter(zip(grid, packed, sharded))
@@ -255,11 +260,11 @@ def bench() -> dict:
           f"{t_seq_warm / t_pack_warm:.1f}x)")
     print(f"  packed+sharded,   {n_shard_engines} engine compile,  cold: "
           f"{t_shard_cold:.1f}s   (steady: {t_shard_warm:.1f}s) on "
-          f"{shard_stats['n_devices']} device(s), "
-          f"{shard_stats['lanes_per_device']} lanes/device")
-    print(f"  packing: {pack_stats['n_waves']} waves, efficiency "
-          f"{pack_stats['packing_efficiency']:.2f} (unpacked "
-          f"{pack_stats['unpacked_efficiency']:.2f})")
+          f"{shard_stats.n_devices} device(s), "
+          f"{shard_stats.lanes_per_device} lanes/device")
+    print(f"  packing: {pack_stats.n_waves} waves, efficiency "
+          f"{pack_stats.packing_efficiency:.2f} (unpacked "
+          f"{pack_stats.unpacked_efficiency:.2f})")
     smoke = bench_smoke()
     return dict(per_size_cold_s=t_seq_cold, per_size_warm_s=t_seq_warm,
                 per_size_engines=n_seq_engines,
@@ -269,14 +274,14 @@ def bench() -> dict:
                 packed_engines=n_pack_engines,
                 sharded_cold_s=t_shard_cold, sharded_warm_s=t_shard_warm,
                 sharded_engines=n_shard_engines,
-                n_devices=shard_stats["n_devices"],
-                lanes_per_device=shard_stats["lanes_per_device"],
+                n_devices=shard_stats.n_devices,
+                lanes_per_device=shard_stats.lanes_per_device,
                 speedup_cold=t_seq_cold / t_cold,
                 speedup_warm=t_seq_warm / t_warm,
                 packed_speedup_cold=t_seq_cold / t_pack_cold,
                 packed_speedup_warm=t_seq_warm / t_pack_warm,
                 sharded_speedup_warm=t_pack_warm / t_shard_warm,
-                pack_stats=pack_stats,
+                pack_stats=pack_stats.to_json(),
                 smoke=smoke)
 
 
@@ -285,12 +290,10 @@ def main(force: bool = False, shard: bool = False):
         with open(OUT) as f:
             data = json.load(f)
     else:
-        shard_stats: dict = {}
-        data = run_grid(_builders(), shard=shard,
-                        shard_stats=shard_stats if shard else None)
-        if shard:
-            print(f"sharded over {shard_stats['n_devices']} device(s), "
-                  f"{shard_stats['lanes_per_device']} lanes/device")
+        data, report = run_grid_report(_builders(), shard=shard)
+        if shard and report.shard is not None:
+            print(f"sharded over {report.shard.n_devices} device(s), "
+                  f"{report.shard.lanes_per_device} lanes/device")
         os.makedirs(os.path.dirname(OUT), exist_ok=True)
         with open(OUT, "w") as f:
             json.dump(data, f, indent=1)

@@ -24,6 +24,7 @@ from benchmarks.workloads import Workload, make_all
 from repro.core import machine
 from repro.core.machine import FABRIC_MODES, MachineConfig
 from repro.core.metrics import POWER_MW, FREQ_HZ
+from repro.core.sweep import SweepReport, SweepRequest, sweep
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
@@ -48,27 +49,33 @@ def _placement_for(mode) -> str:
 
 
 def _result_row(res, batch_wall: float) -> dict:
-    stall = np.asarray(res.stall_per_port)
-    return dict(
-        cycles=res.cycles, utilization=res.utilization,
-        executed=res.executed, enroute=res.enroute,
-        enroute_frac=res.enroute_frac, hops=res.hops,
-        injected=res.injected,
-        stall_total=int(stall.sum()),
-        stall_per_port=stall.sum(axis=0).tolist(),
-        per_pe_busy=np.asarray(res.per_pe_busy).tolist(),
-        # wall-clock of the whole batched grid this row ran in —
-        # per-workload wall time is not individually measurable in a
-        # batched run.
-        batch_wall_s=batch_wall,
-    )
+    row = res.to_json()
+    # wall-clock of the whole batched grid this row ran in — per-workload
+    # wall time is not individually measurable in a batched run.
+    row["batch_wall_s"] = batch_wall
+    return row
 
 
 def run_grid(wls: list[Workload], modes=None, *,
              base_cfg: MachineConfig | None = None,
              max_cycles: int = 400_000, sizes=None, pack: bool = False,
-             pack_stats: dict | None = None, shard: bool = False,
-             cycle_hints=None, shard_stats: dict | None = None) -> dict:
+             shard: bool = False, cycle_hints=None) -> dict:
+    """Run the full (workload x fabric-mode [x mesh-size]) grid in ONE
+    batched device call; returns just the row table (see
+    :func:`run_grid_report` for the table + the sweep's packing /
+    sharding schedules)."""
+    table, _ = run_grid_report(wls, modes, base_cfg=base_cfg,
+                               max_cycles=max_cycles, sizes=sizes,
+                               pack=pack, shard=shard,
+                               cycle_hints=cycle_hints)
+    return table
+
+
+def run_grid_report(wls: list[Workload], modes=None, *,
+                    base_cfg: MachineConfig | None = None,
+                    max_cycles: int = 400_000, sizes=None,
+                    pack: bool = False, shard: bool = False,
+                    cycle_hints=None) -> tuple[dict, SweepReport]:
     """Run the full (workload x fabric-mode [x mesh-size]) grid in ONE
     batched device call.
 
@@ -85,17 +92,17 @@ def run_grid(wls: list[Workload], modes=None, *,
     small lanes co-schedule inside shared padded super-lanes instead of
     each stepping the full padded PE axis (see
     ``repro.core.batch.pack_schedule``; metrics stay bit-identical).
-    ``pack_stats`` receives the packing-efficiency numbers.
 
     ``shard=True`` splits the grid's lane axis over ``jax.devices()``
-    (``machine.run_many(shard=True)``; a no-op on one device), with
-    ``cycle_hints`` (per-lane measured cycles, grid lane order) feeding
-    the shard/wave balancers and ``shard_stats`` receiving
-    ``n_devices`` / ``lanes_per_device``.
+    (a no-op on one device), with ``cycle_hints`` (per-lane measured
+    cycles, grid lane order) feeding the shard/wave balancers.
 
-    Returns ``{mode: [result-row per workload, in input order]}`` when
-    ``sizes`` is None (the classic Figs. 11-14 grid on ``base_cfg``'s
-    mesh), else ``{mode: {"WxH": [rows]}}``.
+    Returns ``(table, report)``: the table is
+    ``{mode: [result-row per workload, in input order]}`` when ``sizes``
+    is None (the classic Figs. 11-14 grid on ``base_cfg``'s mesh), else
+    ``{mode: {"WxH": [rows]}}``; the :class:`SweepReport` carries the
+    packing (``report.pack``) and sharding (``report.shard``) schedules
+    the grid actually ran with.
     """
     modes = list(FABRIC_MODES) if modes is None else list(modes)
     base_cfg = base_cfg or MachineConfig()
@@ -121,11 +128,11 @@ def run_grid(wls: list[Workload], modes=None, *,
         base_cfg, mem_words=max(wl.mem_words for wl in wls),
         max_cycles=max_cycles)
     t0 = time.time()
-    results = machine.run_many(run_cfg, built, modes=lane_modes, pack=pack,
-                               pack_stats=pack_stats, shard=shard,
-                               cycle_hints=cycle_hints,
-                               shard_stats=shard_stats)
+    report = sweep(run_cfg, SweepRequest(
+        workloads=built, modes=lane_modes, pack=pack, shard=shard,
+        cycle_hints=cycle_hints))
     wall = time.time() - t0
+    results = report.lanes
     out: dict = {}
     lanes = iter(zip(built, results))
     for mode in modes:
@@ -142,7 +149,7 @@ def run_grid(wls: list[Workload], modes=None, *,
             by_size[size] = rows
         out[mode] = (by_size[None] if sizes is None else
                      {f"{w}x{h}": by_size[w, h] for (w, h) in size_list})
-    return out
+    return out, report
 
 
 def run_fabric(wl: Workload, mode: str) -> dict:

@@ -91,7 +91,7 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
 
     With ``pack`` (default) the candidate meshes are co-scheduled as
     disjoint sub-meshes of shared padded super-lanes
-    (``machine.run_many(pack=True)``) instead of each small candidate
+    (``SweepRequest(pack=True)``) instead of each small candidate
     stepping the full padded PE axis; the packing plan the search ran
     over is logged in the record.  ``shard=True`` additionally fans the
     candidate lanes out over ``jax.devices()`` (bit-identical; a no-op
@@ -101,6 +101,7 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
     ``save`` the record lands in experiments/perf/fabric__<workload>.json.
     """
     from repro.core import machine
+    from repro.core.sweep import SweepRequest, sweep
     if builders is None:
         from benchmarks.fig17_scaling import _builders
         builders = _builders()
@@ -110,14 +111,10 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
     sizes = FABRIC_SIZES if sizes is None else list(sizes)
     from benchmarks.fig17_scaling import _size_cfg
     lanes = [builders[workload](_size_cfg(w, h)) for (w, h) in sizes]
-    pack_stats: dict = {}
-    shard_stats: dict = {}
-    results = machine.run_many(_size_cfg(*sizes[0]), lanes, pack=pack,
-                               pack_stats=pack_stats if pack else None,
-                               shard=shard,
-                               shard_stats=shard_stats if shard else None)
+    report = sweep(_size_cfg(*sizes[0]),
+                   SweepRequest(workloads=lanes, pack=pack, shard=shard))
     table = {}
-    for (w, h), wl, r in zip(sizes, lanes, results):
+    for (w, h), wl, r in zip(sizes, lanes, report.lanes):
         assert r.completed and wl.check(r.mem_val), f"{workload} @ {w}x{h}"
         table[f"{w}x{h}"] = dict(
             cycles=r.cycles, pes=w * h, cycle_pes=r.cycles * w * h,
@@ -127,8 +124,10 @@ def fabric_autotune(workload: str = "spmv", sizes=None, *,
     rec = dict(workload=workload, table=table, best_latency=best_lat,
                best_efficiency=best_eff,
                engine_cache_size=machine.engine_cache_size(),
-               packed=pack, pack_stats=pack_stats or None,
-               sharded=shard, shard_stats=shard_stats or None)
+               packed=pack,
+               pack_stats=report.pack.to_json() if report.pack else None,
+               sharded=shard,
+               shard_stats=report.shard.to_json() if report.shard else None)
     if save:
         os.makedirs(OUT, exist_ok=True)
         with open(os.path.join(OUT, f"fabric__{workload}.json"), "w") as f:

@@ -11,6 +11,7 @@ throughput.
 import numpy as np
 
 from repro.core import compiler, machine
+from repro.core.sweep import SweepRequest, sweep
 
 
 def powerlaw_sparse(m, n, rng, alpha=2.0):
@@ -60,21 +61,23 @@ def main():
           "en route -> fewer cycles at higher fabric utilization (paper "
           "Fig. 11/13).")
 
-    # --- batched sweep (machine.run_many) --------------------------------
+    # --- batched sweep (SweepRequest -> SweepReport) ----------------------
     # Design-space sweeps batch many workloads into ONE on-device run:
     # here, how row-length skew changes Nexus behavior, in a single call.
-    print("\nbatched skew sweep on Nexus (one run_many call, 3 lanes):")
+    # A sweep is a frozen SweepRequest; the SweepReport carries the lane
+    # results (iterable, like a list) plus any packing/sharding schedules.
+    print("\nbatched skew sweep on Nexus (one sweep call, 3 lanes):")
     rng = np.random.default_rng(4)
     cfg = machine.MachineConfig(mem_words=2048, max_cycles=100_000)
-    sweep = []
+    lanes = []
     for label, alpha in [("mild skew", 4.0), ("power-law", 2.0),
                          ("extreme skew", 1.2)]:
         aa = powerlaw_sparse(96, 96, rng, alpha=alpha)
         xx = rng.integers(-3, 4, size=(96,))
-        sweep.append((label, compiler.build_spmv(aa, xx, cfg)))
-    results = machine.run_many(cfg, [wl for _, wl in sweep])
+        lanes.append((label, compiler.build_spmv(aa, xx, cfg)))
+    report = sweep(cfg, SweepRequest(workloads=[wl for _, wl in lanes]))
     print(f"{'matrix':<16}{'cycles':>8}{'util':>7}{'in-net %':>10}")
-    for (label, wl), r in zip(sweep, results):
+    for (label, wl), r in zip(lanes, report):
         assert r.completed and wl.check(r.mem_val), "wrong result!"
         print(f"{label:<16}{r.cycles:>8}{r.utilization:>7.2f}"
               f"{100 * r.enroute_frac:>9.1f}%")

@@ -14,3 +14,6 @@ from repro.core.batch import BatchedWorkloads, stack_workloads  # noqa: F401
 from repro.core.machine import (  # noqa: F401
     MachineConfig, RunResult, run, run_many,
 )
+from repro.core.sweep import (  # noqa: F401
+    PackStats, ShardStats, SweepReport, SweepRequest, sweep,
+)

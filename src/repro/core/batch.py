@@ -406,6 +406,114 @@ def plan_packing(geoms, *, super_geom=None, groups=None) -> PackPlan:
                     placements=tuple(placements))  # type: ignore[arg-type]
 
 
+class RectPool:
+    """Incremental free-rectangle allocator over ONE super mesh.
+
+    The batch-mode planner (:func:`plan_packing`) places a *closed* lane
+    set once; the sweep service instead needs mid-wave refill — a
+    retired sub-lane's rectangle must become allocatable again while its
+    co-tenants keep running.  This is the free-list that supports it:
+    guillotine allocation (place at the candidate rect's NW corner,
+    split the L-shaped remainder) with greedy edge-merging on release.
+
+    Invariants (held by construction, pinned in tests):
+
+    * free rectangles are pairwise disjoint and inside the mesh;
+    * allocated rectangles are pairwise disjoint and disjoint from every
+      free rectangle;
+    * releasing the last allocation restores the single full-mesh free
+      rectangle, so an emptied super always re-admits any lane that fits
+      the mesh (fragmentation cannot outlive the tenants that caused it).
+
+    ``alloc`` is best-area-fit (smallest free rect that holds the lane)
+    and deterministic; it returns ``None`` — rather than raising — when
+    nothing fits, because "stay pending until a co-tenant retires" is
+    the caller's normal flow, not an error.
+    """
+
+    def __init__(self, geom):
+        w, h = int(geom[0]), int(geom[1])
+        if w < 1 or h < 1:
+            raise ValueError(f"bad pool geometry {geom}")
+        self.geom = (w, h)
+        self.free: list[tuple[int, int, int, int]] = [(0, 0, w, h)]
+        self._allocated: dict[tuple[int, int], tuple[int, int]] = {}
+
+    def alloc(self, geom) -> tuple[int, int] | None:
+        """Reserve a ``(width, height)`` rectangle; returns its ``(x, y)``
+        NW origin, or None when no free rectangle holds it."""
+        w, h = int(geom[0]), int(geom[1])
+        if w < 1 or h < 1:
+            raise ValueError(f"bad lane geometry {geom}")
+        fits = [(fw * fh, fx, fy, k)
+                for k, (fx, fy, fw, fh) in enumerate(self.free)
+                if w <= fw and h <= fh]
+        if not fits:
+            return None
+        _, _, _, k = min(fits)
+        fx, fy, fw, fh = self.free.pop(k)
+        # guillotine split of the L-shaped remainder: cut along the
+        # longer leftover axis so the bigger piece stays one rectangle
+        if fw - w >= fh - h:
+            pieces = [(fx + w, fy, fw - w, fh), (fx, fy + h, w, fh - h)]
+        else:
+            pieces = [(fx + w, fy, fw - w, h), (fx, fy + h, fw, fh - h)]
+        self.free.extend(p for p in pieces if p[2] > 0 and p[3] > 0)
+        self._merge()
+        self._allocated[(fx, fy)] = (w, h)
+        return (fx, fy)
+
+    def release(self, origin, geom) -> None:
+        """Return a previously-allocated rectangle to the pool."""
+        x, y = int(origin[0]), int(origin[1])
+        w, h = int(geom[0]), int(geom[1])
+        if self._allocated.pop((x, y), None) != (w, h):
+            raise ValueError(f"release of unallocated rect "
+                             f"{(x, y, w, h)}")
+        if not self._allocated:
+            # emptied: collapse whatever fragmentation the tenant mix
+            # left behind (pairwise merging alone cannot always undo an
+            # interleaved release order)
+            self.free = [(0, 0) + self.geom]
+            return
+        self.free.append((x, y, w, h))
+        self._merge()
+
+    def _merge(self) -> None:
+        # greedy pairwise merge of free rects sharing a full edge;
+        # O(n^3) worst case on a handful of rects — irrelevant next to a
+        # single engine chunk
+        merged = True
+        while merged:
+            merged = False
+            self.free.sort()
+            for i in range(len(self.free)):
+                ax, ay, aw, ah = self.free[i]
+                for j in range(i + 1, len(self.free)):
+                    bx, by, bw, bh = self.free[j]
+                    if ay == by and ah == bh and ax + aw == bx:
+                        self.free[i] = (ax, ay, aw + bw, ah)
+                    elif ax == bx and aw == bw and ay + ah == by:
+                        self.free[i] = (ax, ay, aw, ah + bh)
+                    else:
+                        continue
+                    self.free.pop(j)
+                    merged = True
+                    break
+                if merged:
+                    break
+
+    @property
+    def n_allocated(self) -> int:
+        return len(self._allocated)
+
+    def used_area(self) -> int:
+        return sum(w * h for (w, h) in self._allocated.values())
+
+    def free_area(self) -> int:
+        return sum(w * h for (_, _, w, h) in self.free)
+
+
 def _rebase_into_super(wl, sub: SubLane, super_width: int, n_super: int,
                        pc_off: int):
     """Relocate one compiled workload into its sub-mesh rectangle.

@@ -1024,6 +1024,31 @@ class RunResult:
     stall_per_port: np.ndarray  # (N,5) congestion proxy (Fig. 14)
     completed: bool
 
+    def to_json(self) -> dict:
+        """JSON-serializable metrics row — the ONE serialization path
+        shared by the BENCH artifacts, golden drift reports and the sweep
+        service, so a renamed metric cannot silently fork the formats.
+
+        ``mem_val`` (the result memory image) is deliberately omitted:
+        artifacts track metrics, not payloads.  ``stall_per_port`` is
+        reduced to per-port totals (the Fig. 14 congestion axis).
+        """
+        stall = np.asarray(self.stall_per_port)
+        return dict(
+            cycles=int(self.cycles),
+            utilization=float(self.utilization),
+            busy_frac=float(self.busy_frac),
+            executed=int(self.executed),
+            enroute=int(self.enroute),
+            enroute_frac=float(self.enroute_frac),
+            hops=int(self.hops),
+            injected=int(self.injected),
+            stall_total=int(stall.sum()),
+            stall_per_port=[int(v) for v in stall.sum(axis=0)],
+            per_pe_busy=[int(v) for v in np.asarray(self.per_pe_busy)],
+            completed=bool(self.completed),
+        )
+
 
 # ----------------------------------------------------------------------------
 # Batched on-device execution engine (design-space sweeps, Figs. 11–17)
@@ -1036,6 +1061,11 @@ class RunResult:
 # Python-level engine and — because the program and mode are traced
 # arguments — the single underlying XLA executable.
 _ENGINE_CACHE: dict = {}
+
+# "run to completion" chunk budget for the engine's traced iteration bound
+# (np.int32 so every caller — run_many and the sliced sweep service — hits
+# the same int32 specialization of the jitted engine).
+ENGINE_UNBOUNDED = np.int32(np.iinfo(np.int32).max)
 
 
 def _engine_key_cfg(cfg: MachineConfig) -> MachineConfig:
@@ -1101,8 +1131,8 @@ def engine_cache_size() -> int:
 
 def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
                 n_devices: int = 1):
-    """Batched runner ``engine(prog, modes, geoms, sub_ids, local_ids, st)
-    -> (st, overflowed, idle)``.
+    """Batched runner ``engine(prog, modes, geoms, sub_ids, local_ids, st,
+    budget) -> (st, overflowed, idle)``.
 
     ``prog`` is (B, P, CFG_F), ``modes`` a (B,) int32 per-lane mode bitmask
     (ignored by static-mode engines), ``geoms`` a (B, 2) int32 per-lane
@@ -1113,7 +1143,16 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
     PE axes of length ``n_max``.  The whole run happens in ONE device
     call: a ``lax.while_loop`` over jitted chunks of ``chunk`` cycles,
     terminating when every lane is idle (or capped, or a lane trips the
-    pending-FIFO guard).  Freezing is per *sub-lane*: a sub-lane (the
+    pending-FIFO guard).
+
+    ``budget`` is a *traced* int32 bound on the number of chunk iterations
+    this call may run — the wave-resumable hook the sweep service slices
+    time with.  Chunk boundaries are identical either way (the inner scan
+    length is static), so running the engine twice with budget b then b'
+    is bit-identical to one call with b + b': the loop carry is the
+    machine state itself.  ``run_many`` passes :data:`ENGINE_UNBOUNDED`
+    (INT32_MAX) to run to completion; being traced, the bound costs no
+    recompile either way.  Freezing is per *sub-lane*: a sub-lane (the
     whole lane, when unpacked) that reaches idle stops advancing its PEs'
     cycle counters and stats while co-tenant sub-meshes keep stepping —
     so per-(sub-)lane metrics match a solo :func:`run` exactly.
@@ -1166,18 +1205,18 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
     step = jax.vmap(lane_step, in_axes=(0, 0, 0, 0, 0, 0))
     batch_idle = jax.vmap(lambda sub_id, s: group_idle(s, sub_id))
 
-    def engine_fn(prog, modes, geoms, sub_ids, local_ids, st):
+    def engine_fn(prog, modes, geoms, sub_ids, local_ids, st, budget):
         def cond(carry):
-            s, over = carry
+            s, over, it = carry
             # a lane is live while any of its PEs still advances: its
             # sub-lane has work left and its cycle counter is below the
             # cap.  (A capped-but-busy sub-lane no longer keeps the lane
             # live — its co-tenants' own counters reach the cap too.)
             live = (~batch_idle(sub_ids, s)) & (s.cycle < cfg.max_cycles)
-            return live.any() & ~over.any()
+            return live.any() & ~over.any() & (it < budget)
 
         def body(carry):
-            s, over = carry
+            s, over, it = carry
             def sub(s, _):
                 return step(prog, modes, geoms, sub_ids, local_ids, s), ()
             s, _ = jax.lax.scan(sub, s, None, length=chunk)
@@ -1189,10 +1228,11 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
             # abort the healthy lanes.
             high = (s.pend_n >= PEND_CAP - 2) & (s.cycle < cfg.max_cycles)
             over = over | high.any(axis=1)
-            return s, over
+            return s, over, it + 1
 
         over0 = jnp.zeros((st.cycle.shape[0],), jnp.bool_)
-        st, over = jax.lax.while_loop(cond, body, (st, over0))
+        st, over, _ = jax.lax.while_loop(cond, body,
+                                         (st, over0, jnp.int32(0)))
         return st, over, batch_idle(sub_ids, st)
 
     if n_devices > 1:
@@ -1207,8 +1247,11 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
         spec = PartitionSpec("lanes")
         # A single spec per argument/result acts as a pytree prefix, so
         # every MachineState leaf splits on its leading lane axis too.
+        # The budget scalar is replicated: every device runs the same
+        # number of chunk iterations at most (its own lanes may idle
+        # earlier, exactly like the unsharded engine).
         engine_fn = shard_map_unchecked(
-            engine_fn, mesh, in_specs=(spec,) * 6,
+            engine_fn, mesh, in_specs=(spec,) * 6 + (PartitionSpec(),),
             out_specs=(spec, spec, spec))
     engine = jax.jit(engine_fn, donate_argnums=5)
 
@@ -1256,13 +1299,18 @@ def _host_stats(st: MachineState) -> dict:
     )
 
 
-def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
-             chunk: int = 512, pack: bool = False,
-             super_geom=None, pack_stats: dict | None = None,
-             shard: bool = False, cycle_hints=None,
-             shard_stats: dict | None = None
-             ) -> list[RunResult]:
+def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
+                   chunk: int = 512, pack: bool = False,
+                   super_geom=None, pack_stats: dict | None = None,
+                   shard: bool = False, cycle_hints=None,
+                   shard_stats: dict | None = None
+                   ) -> list[RunResult]:
     """Simulate B workloads in a single batched on-device run.
+
+    Shared plumbing behind :func:`run_many` (the legacy kwargs surface)
+    and :func:`repro.core.sweep.sweep` (the structured request/report
+    surface) — both are thin shells over this function, which is what
+    keeps them bit-identical by construction.
 
     Args:
       cfg: shared static machine parameters.  ``mem_words`` is widened
@@ -1379,9 +1427,9 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
                         float(cycle_hints[wave[p.lane]]))
             ws: dict | None = {} if shard_stats is not None else None
             try:
-                wave_res = run_many(cfg, wb, chunk=chunk, shard=shard,
-                                    cycle_hints=hints_w,
-                                    shard_stats=ws)
+                wave_res = _run_many_impl(cfg, wb, chunk=chunk, shard=shard,
+                                          cycle_hints=hints_w,
+                                          shard_stats=ws)
             except RuntimeError as e:
                 supers = getattr(e, "lanes", None)
                 if supers is None:
@@ -1539,7 +1587,8 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
         lanes(workloads.prog), lanes(lane_modes),
         lanes(lane_geoms, pad_row=np.array([1, 1], np.int32)),
         lanes(sub_ids),
-        lanes(local_ids, pad_row=np.arange(n_max, dtype=np.int32)), st)
+        lanes(local_ids, pad_row=np.arange(n_max, dtype=np.int32)), st,
+        ENGINE_UNBOUNDED)
     over = np.asarray(over)
     idle = np.asarray(idle)                      # (B, N) per-PE group idle
     host = _host_stats(st)
@@ -1573,6 +1622,42 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
             for b in range(workloads.batch)]
 
 
+def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
+             chunk: int = 512, pack: bool = False,
+             super_geom=None, pack_stats: dict | None = None,
+             shard: bool = False, cycle_hints=None,
+             shard_stats: dict | None = None
+             ) -> list[RunResult]:
+    """Simulate B workloads in a single batched on-device run.
+
+    See :func:`_run_many_impl` for the full argument contract.  Prefer
+    the structured surface — :class:`repro.core.sweep.SweepRequest` in,
+    :class:`repro.core.sweep.SweepReport` out::
+
+        from repro.core.sweep import SweepRequest, sweep
+        report = sweep(cfg, SweepRequest(workloads=wls, pack=True))
+        report.lanes            # the RunResults, in input order
+        report.pack.n_waves     # was: pack_stats out-param dict
+
+    The mutable out-param dicts ``pack_stats=`` / ``shard_stats=`` are
+    deprecated in favor of ``SweepReport.pack`` / ``SweepReport.shard``;
+    passing either emits a :class:`DeprecationWarning` (results stay
+    bit-identical — this shim and :func:`repro.core.sweep.sweep` call the
+    same implementation).
+    """
+    if pack_stats is not None or shard_stats is not None:
+        import warnings
+        warnings.warn(
+            "run_many(pack_stats=..., shard_stats=...) out-param dicts are "
+            "deprecated; use repro.core.sweep.sweep(cfg, SweepRequest(...)) "
+            "and read SweepReport.pack / SweepReport.shard instead",
+            DeprecationWarning, stacklevel=2)
+    return _run_many_impl(cfg, workloads, modes=modes, geoms=geoms,
+                          chunk=chunk, pack=pack, super_geom=super_geom,
+                          pack_stats=pack_stats, shard=shard,
+                          cycle_hints=cycle_hints, shard_stats=shard_stats)
+
+
 def run(cfg: MachineConfig, prog: np.ndarray, static_ams: np.ndarray,
         amq_len: np.ndarray, mem_val: np.ndarray, mem_meta: np.ndarray,
         *, chunk: int = 512) -> RunResult:
@@ -1581,6 +1666,6 @@ def run(cfg: MachineConfig, prog: np.ndarray, static_ams: np.ndarray,
     Thin B=1 wrapper over :func:`run_many`: same engine, same compile
     cache, identical metrics.
     """
-    (res,) = run_many(
+    (res,) = _run_many_impl(
         cfg, [(prog, static_ams, amq_len, mem_val, mem_meta)], chunk=chunk)
     return res

@@ -1,0 +1,208 @@
+"""Structured sweep surface: :class:`SweepRequest` in, :class:`SweepReport`
+out.
+
+``machine.run_many`` grew one keyword per PR — nine kwargs, two of them
+mutable out-param *dicts* (``pack_stats`` / ``shard_stats``) that callers
+had to pre-allocate and rummage through by string key.  That shape cannot
+be a service contract (the sweep service queues requests and returns
+futures — there is nowhere to hand an out-param back), so this module
+replaces it:
+
+* :class:`SweepRequest` — a frozen dataclass naming everything a sweep
+  needs (workloads, per-lane modes / geoms / cycle hints, packing and
+  sharding switches).  Hashable-by-identity config you can stash, log,
+  or resubmit.
+* :class:`SweepReport` — the lane :class:`~repro.core.machine.RunResult`
+  list plus the packing (:class:`PackStats`) and sharding
+  (:class:`ShardStats`) schedules as real typed fields.  Iterates and
+  indexes like the old result list, so ``for r in report`` just works.
+* :func:`sweep` — the entry point.  It calls the same implementation as
+  ``run_many`` (:func:`repro.core.machine._run_many_impl`), so results
+  are bit-identical to the legacy surface by construction.
+
+The legacy kwargs stay available on ``run_many`` as a shim; passing the
+out-param dicts emits a ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import machine
+from repro.core.machine import MachineConfig, RunResult
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRequest:
+    """One batched design-space sweep, declaratively.
+
+    Attributes mirror :func:`repro.core.machine._run_many_impl`'s
+    contract (see its docstring for full semantics):
+
+    * ``workloads`` — compiled workloads (anything with ``prog`` /
+      ``static_ams`` / ``amq_len`` / ``mem_val`` / ``mem_meta``), or an
+      already-stacked :class:`repro.core.batch.BatchedWorkloads`.
+    * ``modes`` / ``geoms`` / ``cycle_hints`` — optional per-lane mode
+      names or bitmasks, ``(width, height)`` meshes, and measured-cycle
+      runtime hints.
+    * ``pack`` / ``super_geom`` — sub-mesh lane packing into shared
+      super-lanes (``geoms`` must then be None: the packer places lanes).
+    * ``shard`` — lane-axis device sharding over ``jax.devices()``.
+    * ``chunk`` — cycles per jitted engine chunk.
+
+    Sequences are frozen to tuples on construction so a request is an
+    immutable value: submitting it twice (or to the sweep service and
+    the blocking path) runs the same sweep.
+    """
+    workloads: tuple
+    modes: tuple | None = None
+    geoms: tuple | None = None
+    cycle_hints: tuple | None = None
+    pack: bool = False
+    super_geom: tuple | None = None
+    shard: bool = False
+    chunk: int = 512
+
+    def __post_init__(self):
+        from repro.core.batch import BatchedWorkloads
+        if not isinstance(self.workloads, BatchedWorkloads):
+            wls = tuple(self.workloads)
+            if not wls:
+                raise ValueError("SweepRequest needs at least one workload")
+            object.__setattr__(self, "workloads", wls)
+        for f in ("modes", "geoms", "cycle_hints"):
+            v = getattr(self, f)
+            if v is not None:
+                object.__setattr__(self, f, tuple(v))
+        if self.super_geom is not None:
+            w, h = self.super_geom
+            object.__setattr__(self, "super_geom", (int(w), int(h)))
+
+    @property
+    def n_lanes(self) -> int:
+        from repro.core.batch import BatchedWorkloads
+        if isinstance(self.workloads, BatchedWorkloads):
+            return self.workloads.batch
+        return len(self.workloads)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackStats:
+    """The packing schedule a ``pack=True`` sweep actually ran.
+
+    ``plan`` is the wave list from ``pack_schedule`` (one dict per wave
+    naming its super-lane geometries and sub-lane placements), kept as
+    reported for artifact round-tripping.
+    """
+    n_waves: int
+    n_super_lanes: int
+    packing_efficiency: float
+    unpacked_efficiency: float
+    plan: tuple = ()
+
+    def to_json(self) -> dict:
+        return dict(n_waves=int(self.n_waves),
+                    n_super_lanes=int(self.n_super_lanes),
+                    packing_efficiency=float(self.packing_efficiency),
+                    unpacked_efficiency=float(self.unpacked_efficiency),
+                    plan=list(self.plan))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStats:
+    """The device-sharding plan a ``shard=True`` sweep actually ran.
+
+    ``plan`` lists lanes per device (per wave, when packed).  On a
+    single-device host ``n_devices`` is 1 and the plan is the trivial
+    one — recorded, not omitted, so artifacts stay shape-stable across
+    hosts.
+    """
+    n_devices: int
+    lanes_per_device: int
+    n_pad_lanes: int
+    plan: tuple = ()
+
+    def to_json(self) -> dict:
+        return dict(n_devices=int(self.n_devices),
+                    lanes_per_device=int(self.lanes_per_device),
+                    n_pad_lanes=int(self.n_pad_lanes),
+                    plan=list(self.plan))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepReport:
+    """Everything a sweep produced: per-lane results + the schedules.
+
+    Behaves like the legacy result list (``len`` / index / iterate all
+    hit ``lanes``), so migrating a call site is usually just swapping
+    the call.  ``pack`` / ``shard`` are None when the corresponding
+    switch was off.
+    """
+    lanes: tuple                      # tuple[RunResult, ...] in input order
+    pack: PackStats | None = None
+    shard: ShardStats | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "lanes", tuple(self.lanes))
+
+    def __len__(self) -> int:
+        return len(self.lanes)
+
+    def __iter__(self):
+        return iter(self.lanes)
+
+    def __getitem__(self, i):
+        return self.lanes[i]
+
+    @property
+    def cycles(self) -> list[int]:
+        """Per-lane cycle counts — feed back as ``cycle_hints`` to replan
+        a follow-up sweep with measured runtimes."""
+        return [r.cycles for r in self.lanes]
+
+    def to_json(self) -> dict:
+        """One JSON document for the whole sweep (lane rows via
+        :meth:`RunResult.to_json`, schedules via their own ``to_json``)."""
+        return dict(
+            lanes=[r.to_json() for r in self.lanes],
+            pack=None if self.pack is None else self.pack.to_json(),
+            shard=None if self.shard is None else self.shard.to_json(),
+        )
+
+
+def sweep(cfg: MachineConfig, request: SweepRequest) -> SweepReport:
+    """Run one :class:`SweepRequest` to completion and report it.
+
+    Blocking, same engine cache and bit-identical results as the legacy
+    ``run_many`` surface (both call the same implementation).  For
+    overlapped / interleaved traffic on one warm engine, use
+    :class:`repro.serve.SweepService` instead.
+    """
+    if not isinstance(request, SweepRequest):
+        raise TypeError(f"sweep() takes a SweepRequest, got "
+                        f"{type(request).__name__} (legacy kwargs live on "
+                        f"machine.run_many)")
+    ps: dict | None = {} if request.pack else None
+    ss: dict | None = {} if request.shard else None
+    from repro.core.batch import BatchedWorkloads
+    wls = (request.workloads if isinstance(request.workloads,
+                                           BatchedWorkloads)
+           else list(request.workloads))
+    results = machine._run_many_impl(
+        cfg, wls,
+        modes=None if request.modes is None else list(request.modes),
+        geoms=None if request.geoms is None else list(request.geoms),
+        chunk=request.chunk, pack=request.pack,
+        super_geom=request.super_geom, pack_stats=ps,
+        shard=request.shard,
+        cycle_hints=(None if request.cycle_hints is None
+                     else list(request.cycle_hints)),
+        shard_stats=ss)
+    pack = None if ps is None else PackStats(
+        n_waves=ps["n_waves"], n_super_lanes=ps["n_super_lanes"],
+        packing_efficiency=ps["packing_efficiency"],
+        unpacked_efficiency=ps["unpacked_efficiency"],
+        plan=tuple(ps.get("plan", ())))
+    shard = None if ss is None else ShardStats(
+        n_devices=ss["n_devices"], lanes_per_device=ss["lanes_per_device"],
+        n_pad_lanes=ss["n_pad_lanes"], plan=tuple(ss.get("plan", ())))
+    return SweepReport(lanes=tuple(results), pack=pack, shard=shard)

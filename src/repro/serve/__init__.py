@@ -1,2 +1,26 @@
-"""Serving substrate: prefill / decode steps with sharded caches."""
-from repro.serve.steps import make_decode_step, make_prefill_step  # noqa
+"""Serving substrate.
+
+* :mod:`repro.serve.fabric` — the resident :class:`SweepService`:
+  continuous-batching fabric simulation on the one cached engine
+  (submit compiled workloads, get per-lane result futures, mid-wave
+  refill of retired sub-lane rectangles).
+* :mod:`repro.serve.steps` — LLM prefill / decode steps with sharded
+  caches (imported lazily: the fabric service must not pull the model
+  stack in).
+"""
+from repro.serve.fabric import (  # noqa: F401
+    CapacityError, ServiceError, SweepService,
+)
+
+_STEP_NAMES = ("make_decode_step", "make_prefill_step")
+
+
+def __getattr__(name):
+    if name in _STEP_NAMES:
+        from repro.serve import steps
+        return getattr(steps, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_STEP_NAMES))

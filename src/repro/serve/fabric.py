@@ -1,0 +1,544 @@
+"""Resident sweep service: continuous batching on the ONE cached engine.
+
+``machine.run_many`` keeps the fabric busy *within* a call — packing,
+waves, sharding — but the engine sits idle *between* calls, and a
+retired sub-lane's rectangle stays dead until its wave ends.  This
+module closes both gaps with LLM-serving-style continuous batching
+applied to fabric simulation:
+
+* clients :meth:`SweepService.submit` compiled workloads at any time and
+  get a :class:`concurrent.futures.Future` per lane;
+* a scheduler thread owns the device: it runs the cached engine in
+  *slices* (a traced chunk budget — same executable ``run_many`` uses,
+  see ``machine._get_engine``), retires sub-lanes the moment their
+  rectangle goes idle, and immediately re-packs pending lanes into the
+  freed rectangles (:class:`repro.core.batch.RectPool`) — mid-wave
+  refill;
+* machine state lives on device across slices and the engine donates
+  its state argument, so steady-state compute slices never reallocate
+  (the jitted install/scrub update allocates a fresh state, but only
+  on admit slices — re-donating engine-produced buffers is unsound on
+  CPU jax, see ``_build_arena``);
+* :meth:`SweepService.drain` / :meth:`SweepService.shutdown` give the
+  graceful endgame: every future is resolved, none orphaned.
+
+Results are bit-identical to a solo (or one-shot ``run_many``) run of
+the same lane: installs reset a rectangle's rows to the exact
+``init_state`` image (cycle, round-robin pointer and statistics
+included), placement reuses the sub-mesh rebasing of the batch packer,
+and west-first routing confines a sub-mesh's traffic to its own
+rectangle — so a lane cannot observe *when* it was installed or who its
+co-tenants were.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from concurrent.futures import Future
+
+import jax
+import numpy as np
+
+from repro.core import machine
+from repro.core.am import C_NEXT_PC
+from repro.core.batch import RectPool, SubLane, _rebase_into_super, bucket
+from repro.core.machine import (ENGINE_UNBOUNDED, MachineConfig,
+                                MachineState, RunResult, _get_engine,
+                                _host_stats, _pe_slice_result, init_state,
+                                mode_code, resolve_mode)
+
+
+class ServiceError(RuntimeError):
+    """The service failed (or was shut down) before this lane finished."""
+
+
+class CapacityError(ValueError):
+    """A submitted workload cannot ever fit the service's arena."""
+
+
+# eq=False: tickets/residents wrap numpy-backed workloads, and the queue
+# bookkeeping (list.remove) needs identity, not elementwise comparison
+@dataclasses.dataclass(eq=False)
+class _Ticket:
+    """One submitted lane waiting for placement."""
+    workload: object
+    mode: int
+    load: float                # longest-first admission key
+    seq: int
+    future: Future
+
+
+@dataclasses.dataclass(eq=False)
+class _Resident:
+    """One lane currently occupying a rectangle of a super-lane."""
+    ticket: _Ticket
+    super_idx: int
+    slot: int                  # sub-lane slot id AND program-arena slot
+    origin: tuple
+    geom: tuple
+    ids: np.ndarray            # super-mesh PE ids, lane-row-major order
+
+
+class SweepService:
+    """Continuous-batching sweep service over one warm compiled engine.
+
+    Args:
+      cfg: the shared :class:`MachineConfig`.  ``mem_words`` is widened
+        to the arena's memory capacity exactly like ``run_many`` widens
+        it for a batch, so the service hits the same engine-cache entry
+        a blocking verification run of the same lanes would.
+      template: compiled workloads that size the arena — program-slot
+        rows, AM-queue depth, memory words and (by default) the
+        super-lane mesh are fixed at the maxima over the template, and
+        every later submission must fit within them (the engine's
+        shapes cannot grow without re-tracing).  The template lanes are
+        NOT run — pass the same objects to :meth:`submit` if you want
+        them executed.  May be None: the first submission batch then
+        serves as the template.
+      super_geom: mesh of each resident super-lane (default: template
+        maxima, i.e. the ``run_many(pack=True)`` default).
+      n_supers: resident super-lane count — the engine's batch axis.
+        More supers = more co-tenancy (and the sharding width).
+      slots_per_super: concurrent sub-lanes per super-lane (default
+        ``min(n_super_pes, 16)``); bounds the program arena.
+      chunk: cycles per jitted engine chunk.  Results are bit-identical
+        across chunk sizes (the chunked while-loop carries the exact
+        machine state), but chunk keys the engine cache — match the
+        blocking calls' chunk to share their engine, or pick a finer
+        one to retire and refill at a finer grain (the service's
+        throughput lever on short-lane traffic).
+      slice_chunks: engine chunks per scheduler slice — the refill
+        latency knob: retirement and refill happen between slices, every
+        ``chunk * slice_chunks`` fabric cycles.
+      shard: split the super-lane axis over ``jax.devices()`` (largest
+        divisor of ``n_supers`` ≤ the device count, so shard_map's
+        even-split invariant holds).
+
+    Thread model: ``submit`` / ``drain`` / ``shutdown`` are safe from
+    any thread; ALL JAX dispatch happens on the single scheduler thread.
+    """
+
+    def __init__(self, cfg: MachineConfig, *, template=None,
+                 super_geom=None, n_supers: int = 2,
+                 slots_per_super: int | None = None, chunk: int = 512,
+                 slice_chunks: int = 2, shard: bool = False):
+        if not (cfg.traced_modes and cfg.traced_geometry):
+            raise ValueError("SweepService needs the traced engine axes "
+                             "(cfg.traced_modes and cfg.traced_geometry)")
+        if n_supers < 1 or chunk < 1 or slice_chunks < 1:
+            raise ValueError("n_supers, chunk and slice_chunks must be >= 1")
+        self._base_cfg = cfg
+        self._req_super_geom = super_geom
+        self._n_supers = int(n_supers)
+        self._req_slots = slots_per_super
+        self._chunk = int(chunk)
+        self._slice_chunks = int(slice_chunks)
+        self._shard = bool(shard)
+
+        self._cond = threading.Condition()
+        self._pending: list[_Ticket] = []
+        self._residents: dict[tuple[int, int], _Resident] = {}
+        self._scrub: list[tuple[int, np.ndarray]] = []  # (super, pe ids)
+        self._closing = False
+        self._abort: Exception | None = None
+        self._seq = 0
+        self._built = False
+        self.stats = dict(n_installs=0, n_refills=0, n_retired=0,
+                          n_slices=0, occupancy_sum=0.0)
+
+        if template is not None:
+            self._build_arena(list(template))
+        self._thread = threading.Thread(
+            target=self._serve_loop, name="sweep-service", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    # client surface
+    # ------------------------------------------------------------------
+    def submit(self, workload, *, mode=None, cycle_hint=None
+               ) -> "Future[RunResult]":
+        """Queue one compiled workload; returns a Future of its
+        :class:`RunResult` (bit-identical to a solo run).
+
+        ``mode`` is a :data:`repro.core.machine.FABRIC_MODES` name or
+        bitmask (default: ``cfg``'s flags).  Only same-mode lanes
+        co-tenant a super-lane, exactly like ``run_many(pack=True)``.
+        ``cycle_hint`` (measured cycles from a prior run) replaces the
+        inverse-mesh-area proxy in the longest-first admission order.
+        """
+        m = mode_code(self._base_cfg) if mode is None else resolve_mode(mode)
+        geom = getattr(workload, "geom", None)
+        if geom is None:
+            raise ValueError("submit() needs a compiled workload "
+                             "(repro.core.compiler records wl.geom)")
+        if self._built:
+            self._check_fits(workload, geom)
+        w, h = int(geom[0]), int(geom[1])
+        load = (float(cycle_hint) if cycle_hint is not None
+                else 1.0 / float(w * h))
+        fut: Future = Future()
+        with self._cond:
+            if self._closing:
+                raise ServiceError(
+                    "sweep service is shut down" if self._abort is None
+                    else f"sweep service failed: {self._abort}")
+            self._pending.append(_Ticket(workload=workload, mode=m,
+                                         load=load, seq=self._seq,
+                                         future=fut))
+            self._seq += 1
+            self._cond.notify_all()
+        return fut
+
+    def map(self, workloads, *, modes=None) -> list["Future[RunResult]"]:
+        """Submit a batch; returns futures in input order."""
+        wls = list(workloads)
+        ms = [None] * len(wls) if modes is None else list(modes)
+        if len(ms) != len(wls):
+            raise ValueError(f"{len(ms)} modes for {len(wls)} workloads")
+        return [self.submit(w, mode=m) for w, m in zip(wls, ms)]
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until every lane submitted so far is resolved."""
+        with self._cond:
+            ok = self._cond.wait_for(
+                lambda: (not self._pending and not self._residents)
+                or self._abort is not None, timeout=timeout)
+            if not ok:
+                raise TimeoutError("sweep service drain timed out")
+            if self._abort is not None:
+                raise ServiceError(f"sweep service failed: {self._abort}")
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop the service.  ``wait=True`` drains first; ``wait=False``
+        fails every unresolved future with :class:`ServiceError`."""
+        with self._cond:
+            self._closing = True
+            if not wait and self._abort is None:
+                self._abort = ServiceError("service shut down before the "
+                                           "lane completed")
+            self._cond.notify_all()
+        self._thread.join()
+
+    def __enter__(self) -> "SweepService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(wait=exc_type is None)
+
+    @property
+    def refill_occupancy(self) -> float:
+        """Mean fraction of stepped PE rows carrying live work, over all
+        engine slices so far — the mid-wave-refill figure of merit (a
+        blocking packed wave's equivalent is its packing efficiency)."""
+        n = self.stats["n_slices"]
+        return self.stats["occupancy_sum"] / n if n else 0.0
+
+    # ------------------------------------------------------------------
+    # arena
+    # ------------------------------------------------------------------
+    def _check_fits(self, wl, geom) -> None:
+        w, h = int(geom[0]), int(geom[1])
+        sw, sh = self._super_geom
+        if w > sw or h > sh:
+            raise CapacityError(f"{w}x{h} lane exceeds the {sw}x{sh} "
+                                f"service super-mesh")
+        if wl.prog.shape[0] > self._p_slot:
+            raise CapacityError(f"{wl.prog.shape[0]} program rows exceed "
+                                f"the {self._p_slot}-row arena slot")
+        if wl.static_ams.shape[1] > self._q_cap:
+            raise CapacityError(f"AM-queue depth {wl.static_ams.shape[1]} "
+                                f"exceeds the arena's {self._q_cap}")
+        if wl.mem_val.shape[1] > self._m_cap:
+            raise CapacityError(f"{wl.mem_val.shape[1]} memory words "
+                                f"exceed the arena's {self._m_cap}")
+
+    def _build_arena(self, wls) -> None:
+        """Fix every engine shape from the template lanes and compile
+        (or fetch) the ONE engine; all later traffic reuses it."""
+        if not wls:
+            raise ValueError("empty template")
+        geoms = [getattr(w, "geom", None) for w in wls]
+        if any(g is None for g in geoms):
+            raise ValueError("template needs compiled workloads "
+                             "(with wl.geom)")
+        sg = self._req_super_geom
+        if sg is None:
+            sg = (max(int(g[0]) for g in geoms),
+                  max(int(g[1]) for g in geoms))
+        self._super_geom = (int(sg[0]), int(sg[1]))
+        sw, sh = self._super_geom
+        n = sw * sh                                   # PE axis per super
+        b = self._n_supers
+        self._p_slot = bucket(max(w.prog.shape[0] for w in wls))
+        self._n_slots = (min(n, 16) if self._req_slots is None
+                         else int(self._req_slots))
+        if not 1 <= self._n_slots <= n:
+            raise ValueError(f"slots_per_super must be in [1, {n}]")
+        self._q_cap = max(w.static_ams.shape[1] for w in wls)
+        self._m_cap = max(max(w.mem_val.shape[1] for w in wls),
+                          self._base_cfg.mem_words)
+        cfg = self._base_cfg
+        if self._m_cap > cfg.mem_words:
+            cfg = dataclasses.replace(cfg, mem_words=self._m_cap)
+        self._cfg = cfg
+
+        n_dev = 1
+        if self._shard:
+            n_avail = min(len(jax.devices()), b)
+            n_dev = max(d for d in range(1, n_avail + 1) if b % d == 0)
+        self._n_dev = n_dev
+        self._engine = _get_engine(cfg, self._chunk, n_max=n,
+                                   n_devices=n_dev)
+
+        msg_f = wls[0].static_ams.shape[2]
+        cfg_f = wls[0].prog.shape[1]
+        self._prog = np.zeros((b, self._n_slots * self._p_slot, cfg_f),
+                              np.int32)
+        self._modes = np.zeros((b,), np.int32)
+        self._geoms = np.tile(np.array([[sw, sh]], np.int32), (b, 1))
+        self._sub_ids = np.zeros((b, n), np.int32)
+        self._local_ids = np.tile(np.arange(n, dtype=np.int32), (b, 1))
+        self._st = jax.vmap(functools.partial(init_state, cfg))(
+            np.zeros((b, n, self._q_cap, msg_f), np.int32),
+            np.zeros((b, n), np.int32),
+            np.zeros((b, n, self._m_cap), np.int32),
+            np.zeros((b, n, self._m_cap, 2), np.int32))
+
+        def _install_fn(st: MachineState, mask, amq, amq_len, mem_val,
+                        mem_meta) -> MachineState:
+            # masked per-row reset to the exact init_state image + the
+            # new lane's compiler outputs; rows outside the mask are
+            # untouched, so co-tenants cannot observe an install.
+            def put(new, old):
+                m = mask.reshape(mask.shape + (1,) * (old.ndim - 2))
+                return jax.numpy.where(m, new, old)
+
+            def zero(old):
+                m = mask.reshape(mask.shape + (1,) * (old.ndim - 2))
+                return jax.numpy.where(m, old.dtype.type(0), old)
+
+            return MachineState(
+                buf=zero(st.buf), buf_n=zero(st.buf_n),
+                amq=put(amq, st.amq), amq_head=zero(st.amq_head),
+                amq_len=put(amq_len, st.amq_len),
+                pend=zero(st.pend), pend_h=zero(st.pend_h),
+                pend_n=zero(st.pend_n),
+                mem_val=put(mem_val, st.mem_val),
+                mem_meta=put(mem_meta, st.mem_meta),
+                stream_on=zero(st.stream_on),
+                stream_msg=zero(st.stream_msg),
+                stream_base=zero(st.stream_base),
+                stream_left=zero(st.stream_left),
+                swq=zero(st.swq), swq_h=zero(st.swq_h),
+                swq_n=zero(st.swq_n),
+                rr=zero(st.rr), cycle=zero(st.cycle),
+                st_busy=zero(st.st_busy), st_exec=zero(st.st_exec),
+                st_enroute=zero(st.st_enroute),
+                st_stall=zero(st.st_stall), st_hops=zero(st.st_hops),
+                st_inj=zero(st.st_inj))
+
+        # NOT in machine's engine cache: the install update is service
+        # state, keyed to this arena's shapes.  The old state is NOT
+        # donated: re-donating buffers the (donating) engine just
+        # produced corrupts them on CPU jax — the install allocates
+        # fresh output buffers instead, only on admit slices, and the
+        # engine keeps donating its state argument every slice.
+        self._install = jax.jit(_install_fn)
+
+        self._pools = [RectPool(self._super_geom) for _ in range(b)]
+        self._free_slots = [set(range(self._n_slots)) for _ in range(b)]
+        self._super_mode: list[int | None] = [None] * b
+        self._built = True
+
+    # ------------------------------------------------------------------
+    # scheduler (single thread; owns all JAX dispatch)
+    # ------------------------------------------------------------------
+    def _serve_loop(self) -> None:
+        try:
+            while True:
+                with self._cond:
+                    self._cond.wait_for(
+                        lambda: self._pending or self._residents
+                        or self._closing)
+                    if self._abort is not None or (
+                            self._closing and not self._pending
+                            and not self._residents):
+                        break
+                self._pump()
+        except Exception as e:                       # pragma: no cover
+            with self._cond:
+                self._abort = self._abort or e
+                self._cond.notify_all()
+        finally:
+            self._fail_unresolved()
+
+    def _fail_unresolved(self) -> None:
+        with self._cond:
+            err = self._abort or ServiceError("sweep service stopped")
+            tickets = ([r.ticket for r in self._residents.values()]
+                       + list(self._pending))
+            self._residents.clear()
+            self._pending.clear()
+            self._closing = True
+            for t in tickets:
+                if not t.future.done():
+                    t.future.set_exception(
+                        err if isinstance(err, ServiceError)
+                        else ServiceError(str(err)))
+            self._cond.notify_all()
+
+    def _pump(self) -> None:
+        """One scheduler round: admit+install, run a slice, retire."""
+        if not self._built:
+            with self._cond:
+                wls = [t.workload for t in self._pending]
+            if not wls:
+                return
+            self._build_arena(wls)       # first batch sizes the arena
+        self._admit()
+        if not self._residents:
+            return
+        st, over, idle = self._engine(
+            self._prog, self._modes, self._geoms, self._sub_ids,
+            self._local_ids, self._st, np.int32(self._slice_chunks))
+        self._st = st
+        over = np.asarray(over)
+        self.stats["n_slices"] += 1
+        b, n = self._sub_ids.shape
+        self.stats["occupancy_sum"] += (
+            sum(p.used_area() for p in self._pools) / float(b * n))
+        if over.any():
+            bad = np.nonzero(over)[0].tolist()
+            with self._cond:
+                self._abort = ServiceError(
+                    "pending-FIFO overflow: consumption guarantee violated "
+                    f"(simulator invariant; super-lanes {bad})")
+                self._cond.notify_all()
+            return
+        self._retire(np.asarray(idle), st)
+
+    def _admit(self) -> None:
+        """Place pending lanes into free rectangles, longest first, and
+        install them (plus any scrub-pending rows) in ONE donated
+        device update."""
+        with self._cond:
+            pending = sorted(self._pending, key=lambda t: (-t.load, t.seq))
+        placed: list[_Resident] = []
+        for t in pending:
+            try:
+                self._check_fits(t.workload, t.workload.geom)
+            except CapacityError as e:
+                # resolve before unqueueing, for the same drain()
+                # ordering reason as _retire
+                t.future.set_exception(e)
+                with self._cond:
+                    self._pending.remove(t)
+                    self._cond.notify_all()
+                continue
+            # candidate supers: same mode, or empty (which adopts the
+            # mode); least-loaded first so sharded supers stay balanced
+            cands = sorted(
+                (s for s in range(self._n_supers)
+                 if self._free_slots[s]
+                 and (self._super_mode[s] in (None, t.mode))),
+                key=lambda s: (self._pools[s].used_area(), s))
+            for s in cands:
+                origin = self._pools[s].alloc(t.workload.geom)
+                if origin is None:
+                    continue
+                slot = min(self._free_slots[s])
+                self._free_slots[s].discard(slot)
+                self._super_mode[s] = t.mode
+                geom = (int(t.workload.geom[0]), int(t.workload.geom[1]))
+                sub = SubLane(lane=0, super_lane=s, origin=origin,
+                              geom=geom)
+                placed.append(_Resident(
+                    ticket=t, super_idx=s, slot=slot, origin=origin,
+                    geom=geom, ids=sub.pe_ids(self._super_geom[0])))
+                break
+        if not placed and not self._scrub:
+            return
+        with self._cond:
+            for r in placed:
+                self._pending.remove(r.ticket)
+                self._residents[(r.super_idx, r.slot)] = r
+        self._install_lanes(placed)
+
+    def _install_lanes(self, placed: list[_Resident]) -> None:
+        b = self._n_supers
+        sw, _ = self._super_geom
+        n = self._sub_ids.shape[1]
+        mask = np.zeros((b, n), bool)
+        amq = np.zeros((b, n, self._q_cap,
+                        self._st.amq.shape[-1]), np.int32)
+        alen = np.zeros((b, n), np.int32)
+        val = np.zeros((b, n, self._m_cap), np.int32)
+        meta = np.zeros((b, n, self._m_cap, 2), np.int32)
+        for s, ids in self._scrub:
+            mask[s, ids] = True           # zero-reset a capped tenant's
+        self._scrub.clear()               # rows before any slot reuse
+        refill = self.stats["n_slices"] > 0
+        for r in placed:
+            wl = r.ticket.workload
+            s, ids = r.super_idx, r.ids
+            off = r.slot * self._p_slot
+            sub = SubLane(lane=0, super_lane=s, origin=r.origin,
+                          geom=r.geom)
+            a, al, v, mt = _rebase_into_super(wl, sub, sw, n, off)
+            mask[s, ids] = True
+            amq[s, ids, :a.shape[1]] = a[ids]
+            alen[s, ids] = al[ids]
+            val[s, ids, :v.shape[1]] = v[ids]
+            meta[s, ids, :mt.shape[1]] = mt[ids]
+            p = np.array(wl.prog, np.int32, copy=True)
+            p[:, C_NEXT_PC] += off
+            self._prog[s, off:off + self._p_slot] = 0
+            self._prog[s, off:off + p.shape[0]] = p
+            self._sub_ids[s, ids] = r.slot
+            self._local_ids[s, ids] = np.arange(len(ids), dtype=np.int32)
+            self._modes[s] = r.ticket.mode
+            self.stats["n_installs"] += 1
+            self.stats["n_refills"] += int(refill)
+        self._st = self._install(self._st, mask, amq, alen, val, meta)
+
+    def _retire(self, idle: np.ndarray, st) -> None:
+        """Resolve every resident whose sub-lane went idle (or hit the
+        cycle cap) and free its rectangle for the next admission."""
+        cycle = np.asarray(st.cycle)
+        done_now = []
+        for key, r in self._residents.items():
+            fin = bool(idle[r.super_idx, r.ids[0]])
+            capped = int(cycle[r.super_idx][r.ids].max()) \
+                >= self._cfg.max_cycles
+            if fin or capped:
+                done_now.append((key, r, fin))
+        if not done_now:
+            return
+        # the result-bearing leaves (memory image included) only cross to
+        # host when something actually retires; a pure-compute slice costs
+        # one small (b, n) cycle/idle sync.
+        host = _host_stats(st)
+        # resolve the futures BEFORE removing the residents: drain()
+        # unblocks on empty pending+residents, and must never observe an
+        # "all drained" state while a result is still unset.
+        for key, r, fin in done_now:
+            self._pools[r.super_idx].release(r.origin, r.geom)
+            self._free_slots[r.super_idx].add(r.slot)
+            if not fin:
+                # a capped lane's rows still hold in-flight garbage;
+                # zero them before the rectangle (or slot) is reused
+                self._scrub.append((r.super_idx, r.ids))
+            self.stats["n_retired"] += 1
+            r.ticket.future.set_result(
+                _pe_slice_result(host, fin, r.super_idx, r.ids))
+        with self._cond:
+            for key, r, _ in done_now:
+                del self._residents[key]
+            for s in {r.super_idx for _, r, _ in done_now}:
+                if not self._residents_in(s):
+                    self._super_mode[s] = None
+            self._cond.notify_all()
+
+    def _residents_in(self, s: int) -> bool:
+        return any(k[0] == s for k in self._residents)

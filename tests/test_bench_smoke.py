@@ -107,15 +107,14 @@ def test_harness_grid_pack_opt_in():
                                                            strategy=s),
                     useful_ops=2 * int(np.count_nonzero(a)),
                     cgra=None, systolic_cycles=None, mem_words=1024)]
-    stats: dict = {}
     base = MachineConfig(width=2, height=2)
-    packed = harness.run_grid(wls, ["nexus"], base_cfg=base,
-                              max_cycles=100_000,
-                              sizes=[(2, 2), (4, 4)], pack=True,
-                              pack_stats=stats)
+    packed, report = harness.run_grid_report(wls, ["nexus"], base_cfg=base,
+                                             max_cycles=100_000,
+                                             sizes=[(2, 2), (4, 4)],
+                                             pack=True)
     plain = harness.run_grid(wls, ["nexus"], base_cfg=base,
                              max_cycles=100_000, sizes=[(2, 2), (4, 4)])
-    assert stats["packing_efficiency"] >= stats["unpacked_efficiency"]
+    assert report.pack.packing_efficiency >= report.pack.unpacked_efficiency
     for size in ("2x2", "4x4"):
         p, q = packed["nexus"][size][0], plain["nexus"][size][0]
         assert p["cycles"] == q["cycles"]

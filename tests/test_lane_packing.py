@@ -18,6 +18,7 @@ import pytest
 
 from repro.core import batch, compiler, machine
 from repro.core.machine import MachineConfig
+from repro.core.sweep import SweepRequest, sweep
 from repro.testing import given, settings, strategies as st
 
 RNG = np.random.default_rng(21)
@@ -194,12 +195,11 @@ def test_packed_mixed_sizes_match_solo_runs(per_size):
     lane) == per-lane solo runs, bit for bit, incl. per-PE arrays."""
     lanes = [(size, *per_size[size]) for size in SIZES]
     wls = [by["spmv"] for _, _, by in lanes]
-    stats: dict = {}
-    results = machine.run_many(_cfg(), wls, pack=True, pack_stats=stats)
+    report = sweep(_cfg(), SweepRequest(workloads=wls, pack=True))
     # 3x3 and 2x2 cannot share a 4x4 super (no room), but the plan must
     # never be WORSE than one lane per workload
-    assert stats["packing_efficiency"] >= stats["unpacked_efficiency"]
-    for ((w, h), cfg, by), r in zip(lanes, results):
+    assert report.pack.packing_efficiency >= report.pack.unpacked_efficiency
+    for ((w, h), cfg, by), r in zip(lanes, report):
         s = _solo(cfg, by["spmv"])
         assert _sig(s) == _sig(r), (w, h)
         assert r.per_pe_busy.shape == (w * h,)
@@ -214,10 +214,10 @@ def test_packed_co_tenants_match_solo_runs(per_size):
     co-tenants of ONE super-lane; metrics still match the solo runs."""
     wls = [per_size[size][1][name]
            for size in SIZES for name in ("spmv", "bfs")]
-    stats: dict = {}
-    results = machine.run_many(_cfg(), wls, pack=True, super_geom=(6, 6),
-                               pack_stats=stats)
-    assert stats["n_super_lanes"] < len(wls), "packing must co-tenant"
+    report = sweep(_cfg(), SweepRequest(workloads=wls, pack=True,
+                                        super_geom=(6, 6)))
+    results = report.lanes
+    assert report.pack.n_super_lanes < len(wls), "packing must co-tenant"
     i = 0
     for size in SIZES:
         cfg, by = per_size[size]

@@ -22,6 +22,7 @@ import pytest
 
 from repro.core import batch, compiler, machine
 from repro.core.machine import MachineConfig
+from repro.core.sweep import SweepRequest, sweep
 from repro.testing import given, settings, strategies as st
 
 RNG = np.random.default_rng(33)
@@ -268,15 +269,15 @@ def test_sharded_grid_matches_unsharded_and_solo(per_size, n_devices):
               for mode in machine.FABRIC_MODES]
     wls = [per_size[size][1][name] for size, name, _ in points]
     modes = [mode for _, _, mode in points]
-    stats: dict = {}
     machine.clear_engine_cache()
-    sharded = machine.run_many(_cfg(), wls, modes=modes, shard=True,
-                               shard_stats=stats)
+    report = sweep(_cfg(), SweepRequest(workloads=wls, modes=modes,
+                                        shard=True))
+    sharded = report.lanes
     assert machine.engine_cache_size() == 1, \
         "the sharded grid must compile exactly one engine"
-    assert stats["n_devices"] == n_devices > 1
-    assert stats["lanes_per_device"] * n_devices == \
-        len(wls) + stats["n_pad_lanes"]
+    assert report.shard.n_devices == n_devices > 1
+    assert report.shard.lanes_per_device * n_devices == \
+        len(wls) + report.shard.n_pad_lanes
     unsharded = machine.run_many(_cfg(), wls, modes=modes)
     for (size, name, mode), r_sh, r_un in zip(points, sharded, unsharded):
         assert _sig(r_sh) == _sig(r_un), (size, name, mode)
@@ -301,9 +302,9 @@ def test_sharded_odd_batch_pads_inertly(per_size, n_devices):
     b = n_devices + 1  # guarantees padding on any forced device count
     wls = ([per_size[size][1]["spmv"] for size in SIZES] * 3)[:b]
     sizes = (SIZES * 3)[:b]
-    stats: dict = {}
-    res = machine.run_many(_cfg(), wls, shard=True, shard_stats=stats)
-    assert stats["n_pad_lanes"] == n_devices - 1
+    report = sweep(_cfg(), SweepRequest(workloads=wls, shard=True))
+    res = report.lanes
+    assert report.shard.n_pad_lanes == n_devices - 1
     for size, wl, r in zip(sizes, wls, res):
         assert _sig(r) == _sig(_solo(per_size[size][0], wl)), size
         assert wl.check(r.mem_val)
@@ -316,10 +317,11 @@ def test_shard_device_count_caps_at_batch(per_size, n_devices):
     (repro.launch.dryrun forces 512 fake host devices — a 2-lane sweep
     must not become a 512-lane mesh)."""
     wls = [per_size[2, 2][1]["spmv"], per_size[4, 4][1]["spmv"]]
-    stats: dict = {}
-    res = machine.run_many(_cfg(), wls, shard=True, shard_stats=stats)
-    assert stats["n_devices"] == 2
-    assert stats["lanes_per_device"] == 1 and stats["n_pad_lanes"] == 0
+    report = sweep(_cfg(), SweepRequest(workloads=wls, shard=True))
+    res = report.lanes
+    assert report.shard.n_devices == 2
+    assert (report.shard.lanes_per_device == 1
+            and report.shard.n_pad_lanes == 0)
     for (w, h), wl, r in zip([(2, 2), (4, 4)], wls, res):
         assert _sig(r) == _sig(_solo(per_size[w, h][0], wl))
 
@@ -333,11 +335,11 @@ def test_shard_composes_with_pack(per_size, n_devices):
               for mode in machine.FABRIC_MODES]
     wls = [per_size[size][1][name] for size, name, _ in points]
     modes = [mode for _, _, mode in points]
-    stats: dict = {}
-    both = machine.run_many(_cfg(), wls, modes=modes, pack=True,
-                            shard=True, shard_stats=stats)
+    report = sweep(_cfg(), SweepRequest(workloads=wls, modes=modes,
+                                        pack=True, shard=True))
+    both = report.lanes
     # per-wave device count: capped at the wave's own super-lane count
-    assert 1 <= stats["n_devices"] <= n_devices
+    assert 1 <= report.shard.n_devices <= n_devices
     packed = machine.run_many(_cfg(), wls, modes=modes, pack=True)
     for (size, name, mode), r_b, r_p in zip(points, both, packed):
         assert _sig(r_b) == _sig(r_p), (size, name, mode)
@@ -356,13 +358,12 @@ def test_shard_on_one_device_is_plain_engine(per_size, n_devices):
     wls = [per_size[size][1]["spmv"] for size in SIZES]
     plain = machine.run_many(_cfg(), wls)
     before = machine.engine_cache_size()
-    stats: dict = {}
-    sharded = machine.run_many(_cfg(), wls, shard=True, shard_stats=stats)
-    for p, s in zip(plain, sharded):
+    report = sweep(_cfg(), SweepRequest(workloads=wls, shard=True))
+    for p, s in zip(plain, report):
         assert _sig(p) == _sig(s)
-    assert stats["n_devices"] == min(n_devices, len(wls))
+    assert report.shard.n_devices == min(n_devices, len(wls))
     if n_devices == 1:
         assert machine.engine_cache_size() == before, \
             "single-device shard=True must reuse the plain engine"
-        assert stats["lanes_per_device"] == len(wls)
-        assert stats["n_pad_lanes"] == 0
+        assert report.shard.lanes_per_device == len(wls)
+        assert report.shard.n_pad_lanes == 0

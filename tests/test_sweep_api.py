@@ -1,0 +1,128 @@
+"""The structured sweep surface: SweepRequest/SweepReport vs the legacy
+run_many kwargs shim.
+
+Golden contract: ``sweep(cfg, SweepRequest(...))`` is bit-for-bit the
+legacy ``run_many(...)`` call it replaces (same implementation under
+both), the legacy out-param dicts keep working but warn, and a plain
+``run_many`` call stays silent — the 7 pre-existing test files must not
+start warning.
+"""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import compiler, machine
+from repro.core.machine import MachineConfig
+from repro.core.sweep import (PackStats, ShardStats, SweepReport,
+                              SweepRequest, sweep)
+
+RNG = np.random.default_rng(9)
+
+
+def _cfg(w=4, h=4, **kw):
+    kw.setdefault("mem_words", 1024)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(width=w, height=h, **kw)
+
+
+@pytest.fixture(scope="module")
+def mixed():
+    """Three mixed-size spmv lanes (2x2, 3x3, 4x4)."""
+    wls = []
+    for n in (2, 3, 4):
+        a = compiler.random_sparse(6, 6, 0.4, RNG)
+        x = RNG.integers(-3, 4, size=(6,))
+        wls.append(compiler.build_spmv(a, x, _cfg(n, n)))
+    return wls
+
+
+def _sig(r):
+    return (r.to_json(), np.asarray(r.mem_val).tolist())
+
+
+def test_sweep_matches_legacy_shim_bit_for_bit(mixed):
+    """sweep() == run_many(pack_stats=..., shard_stats=...) — every lane
+    field and the schedule dicts — and the legacy spelling warns."""
+    ps: dict = {}
+    ss: dict = {}
+    with pytest.warns(DeprecationWarning, match="SweepRequest"):
+        legacy = machine.run_many(_cfg(), mixed, pack=True, shard=True,
+                                  pack_stats=ps, shard_stats=ss)
+    report = sweep(_cfg(), SweepRequest(workloads=mixed, pack=True,
+                                        shard=True))
+    assert len(report) == len(legacy) == len(mixed)
+    for r_new, r_old in zip(report, legacy):
+        assert _sig(r_new) == _sig(r_old)
+    assert report.pack is not None and report.shard is not None
+    assert report.pack.to_json() == dict(ps)
+    assert report.shard.to_json() == dict(ss)
+
+
+def test_plain_run_many_does_not_warn(mixed):
+    """Only the out-param dicts are deprecated; a bare run_many (what the
+    whole pre-existing test suite calls) stays warning-free."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        res = machine.run_many(_cfg(), mixed, pack=True)
+    assert all(r.completed for r in res)
+
+
+def test_sweep_rejects_non_request(mixed):
+    with pytest.raises(TypeError, match="SweepRequest"):
+        sweep(_cfg(), mixed)
+
+
+def test_request_is_frozen_and_coerces():
+    req = SweepRequest(workloads=[object()], modes=["nexus"],
+                       cycle_hints=[7], super_geom=[4, 4])
+    assert isinstance(req.workloads, tuple)
+    assert req.modes == ("nexus",)
+    assert req.cycle_hints == (7,)
+    assert req.super_geom == (4, 4)
+    assert req.n_lanes == 1
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        req.pack = True
+    with pytest.raises(ValueError, match="at least one workload"):
+        SweepRequest(workloads=[])
+
+
+def test_report_list_protocol_and_json(mixed):
+    report = sweep(_cfg(), SweepRequest(workloads=mixed))
+    assert len(report) == 3
+    assert report[0] is report.lanes[0]
+    assert [r.cycles for r in report] == report.cycles
+    doc = json.dumps(report.to_json())        # must be JSON-serializable
+    back = json.loads(doc)
+    assert [row["cycles"] for row in back["lanes"]] == report.cycles
+    assert back["pack"] is None and back["shard"] is None
+
+
+def test_run_result_to_json_fields(mixed):
+    r = sweep(_cfg(), SweepRequest(workloads=mixed[:1]))[0]
+    row = r.to_json()
+    assert row["cycles"] == r.cycles and row["completed"] is True
+    assert row["stall_total"] == int(np.asarray(r.stall_per_port).sum())
+    assert len(row["per_pe_busy"]) == 2 * 2    # the 2x2 lane
+    json.dumps(row)
+
+
+def test_shard_report_fields(mixed, n_devices):
+    report = sweep(_cfg(), SweepRequest(workloads=mixed, shard=True))
+    sh = report.shard
+    assert isinstance(sh, ShardStats)
+    assert 1 <= sh.n_devices <= max(1, min(n_devices, len(mixed)))
+    assert sh.lanes_per_device * sh.n_devices == len(mixed) + sh.n_pad_lanes
+    assert report.pack is None
+
+
+def test_pack_report_plan_round_trips(mixed):
+    report = sweep(_cfg(), SweepRequest(workloads=mixed, pack=True))
+    pk = report.pack
+    assert isinstance(pk, PackStats)
+    assert pk.packing_efficiency >= pk.unpacked_efficiency
+    placed = sum(len(w["lanes"]) for w in pk.plan)
+    assert placed == len(mixed)
+    json.dumps(pk.to_json())

@@ -1,0 +1,233 @@
+"""Continuous-batching sweep service (repro.serve.SweepService).
+
+The service contract, pinned:
+
+  * every future's RunResult is BIT-identical to the one-shot
+    ``run_many`` of the same lane — installs reset rectangles to the
+    exact init_state image, so a lane cannot observe when it was
+    admitted or who its co-tenants were;
+  * exactly ONE engine is compiled for the whole session
+    (``machine.engine_cache_size() == 1``), the same cache entry a
+    blocking run of the same traffic hits;
+  * drain leaves no orphaned futures, shutdown(wait=False) fails the
+    unresolved ones with ServiceError;
+  * capacity pressure is handled by mid-wave refill (the soak traffic
+    deliberately oversubscribes the arena), never by recompiling.
+
+Plus the RectPool free-list the refill scheduler runs on.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compiler, machine
+from repro.core.batch import RectPool
+from repro.core.machine import MachineConfig
+from repro.serve import CapacityError, ServiceError, SweepService
+
+RNG = np.random.default_rng(17)
+
+
+def _cfg(w=4, h=4, **kw):
+    kw.setdefault("mem_words", 1024)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(width=w, height=h, **kw)
+
+
+def _assert_same(r, w, label):
+    assert r.to_json() == w.to_json(), label
+    np.testing.assert_array_equal(np.asarray(r.mem_val),
+                                  np.asarray(w.mem_val), err_msg=str(label))
+
+
+# ----------------------------------------------------------------------
+# RectPool: the mid-wave-refill free-list
+# ----------------------------------------------------------------------
+def test_rect_pool_alloc_release_invariants():
+    pool = RectPool((8, 8))
+    assert pool.free_area() == 64 and pool.used_area() == 0
+    allocs = []
+    for geom in [(2, 2), (3, 3), (4, 4), (2, 3), (3, 2), (2, 2), (8, 8)]:
+        origin = pool.alloc(geom)
+        if origin is not None:
+            allocs.append((origin, geom))
+        # conservation: every cell is free or allocated, never both
+        assert pool.used_area() + pool.free_area() == 64
+    assert len(allocs) >= 5            # the 8x8 can't fit, the rest must
+    grid = np.zeros((8, 8), int)
+    for (x, y), (w, h) in allocs:
+        assert 0 <= x and x + w <= 8 and 0 <= y and y + h <= 8
+        grid[y:y + h, x:x + w] += 1
+    assert grid.max() == 1, "live rectangles overlap"
+    assert pool.used_area() == sum(w * h for _, (w, h) in allocs)
+    # interleaved release order, then drain to empty
+    for origin, geom in allocs[::2] + allocs[1::2]:
+        pool.release(origin, geom)
+    assert pool.n_allocated == 0 and pool.used_area() == 0
+    # emptied pool collapses to ONE maximal free rect (pairwise merging
+    # alone cannot always undo an interleaved guillotine history)
+    assert pool.free == [(0, 0, 8, 8)]
+    assert pool.alloc((8, 8)) == (0, 0)
+
+
+def test_rect_pool_refill_reuses_freed_rectangle():
+    pool = RectPool((4, 4))
+    a = pool.alloc((2, 2))
+    b = pool.alloc((2, 2))
+    assert a is not None and b is not None and a != b
+    pool.release(a, (2, 2))
+    assert pool.alloc((2, 2)) == a     # the freed rect is allocatable now
+    assert pool.alloc((4, 4)) is None  # ...but a co-tenant still blocks 4x4
+
+
+def test_rect_pool_rejects_bad_release_and_oversize():
+    pool = RectPool((4, 4))
+    assert pool.alloc((5, 1)) is None
+    with pytest.raises(ValueError, match="unallocated"):
+        pool.release((0, 0), (2, 2))
+    origin = pool.alloc((2, 2))
+    with pytest.raises(ValueError, match="unallocated"):
+        pool.release(origin, (3, 3))   # right origin, wrong geometry
+
+
+# ----------------------------------------------------------------------
+# service traffic
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def traffic():
+    """Mixed workload x mode x size lanes (12 total, ~116 PE-rows of
+    demand) — far over the 2-super 4x4 arena's 32 rows, so admission
+    MUST wait on mid-wave refills of retired rectangles."""
+    from benchmarks.workloads import small_world_graph
+    lanes, modes = [], []
+    for n in (2, 3, 4):
+        cfg = _cfg(n, n)
+        a = compiler.random_sparse(6, 6, 0.4, RNG)
+        x = RNG.integers(-3, 4, size=(6,))
+        rp, col = small_world_graph(12, 4, 2)
+        for _ in range(2):
+            lanes.append(compiler.build_spmv(a, x, cfg))
+            modes.append("nexus")
+            lanes.append(compiler.build_bfs(rp, col, 0, cfg))
+            modes.append("tia")
+    return lanes, modes
+
+
+@pytest.fixture(scope="module")
+def reference(traffic):
+    """One-shot blocking run_many of the same lanes — the bit-identity
+    oracle for every service result."""
+    lanes, modes = traffic
+    return machine.run_many(_cfg(), lanes, modes=modes)
+
+
+# ----------------------------------------------------------------------
+# the soak contract
+# ----------------------------------------------------------------------
+def test_service_soak_bit_identical_one_engine_clean_drain(traffic,
+                                                           reference):
+    lanes, modes = traffic
+    machine.clear_engine_cache()
+    rng = np.random.default_rng(0)
+    with SweepService(_cfg(), template=lanes, n_supers=2,
+                      slice_chunks=1) as svc:
+        for rd in range(2):
+            order = [int(i) for i in rng.permutation(len(lanes))]
+            futs = {}
+            for i in order:
+                hint = reference[i].cycles if i % 3 == 0 else None
+                futs[i] = svc.submit(lanes[i], mode=modes[i],
+                                     cycle_hint=hint)
+            svc.drain(timeout=600)
+            assert all(f.done() for f in futs.values()), "orphaned futures"
+            for i, f in futs.items():
+                _assert_same(f.result(), reference[i],
+                             f"round {rd} lane {i}")
+        assert machine.engine_cache_size() == 1, \
+            "the service must stay on ONE compiled engine"
+        assert svc.stats["n_retired"] == 2 * len(lanes)
+        assert svc.stats["n_refills"] > 0, \
+            "oversubscribed traffic must exercise mid-wave refill"
+        assert 0 < svc.refill_occupancy <= 1
+    # the context manager drained and shut down: the service refuses
+    # new work instead of orphaning it
+    with pytest.raises(ServiceError, match="shut down"):
+        svc.submit(lanes[0], mode=modes[0])
+
+
+def test_service_hits_the_same_engine_cache_entry(traffic, reference):
+    """A blocking run_many of the same traffic, then the service: one
+    shared cache entry, not one each."""
+    lanes, modes = traffic
+    machine.clear_engine_cache()
+    machine.run_many(_cfg(), lanes, modes=modes)
+    assert machine.engine_cache_size() == 1
+    with SweepService(_cfg(), template=lanes, n_supers=2) as svc:
+        futs = [svc.submit(wl, mode=m) for wl, m in zip(lanes, modes)]
+        svc.drain(timeout=600)
+        for f, w in zip(futs, reference):
+            assert f.result().cycles == w.cycles
+    assert machine.engine_cache_size() == 1, \
+        "the service arena must reuse run_many's engine entry"
+
+
+def test_lazy_template_first_batch_sizes_arena(traffic, reference):
+    """template=None: the first submission batch sizes the arena."""
+    lanes, _ = traffic
+    with SweepService(_cfg(), n_supers=2) as svc:
+        futs = [svc.submit(lanes[0], mode="nexus") for _ in range(3)]
+        svc.drain(timeout=300)
+        for f in futs:
+            _assert_same(f.result(), reference[0], "lazy lane")
+
+
+def test_capacity_error_for_oversize_lane(traffic):
+    lanes, _ = traffic
+    rng = np.random.default_rng(1)
+    a = compiler.random_sparse(6, 6, 0.4, rng)
+    x = rng.integers(-3, 4, size=(6,))
+    big = compiler.build_spmv(a, x, _cfg(6, 6))
+    # template is a single 2x2 lane -> the arena super-mesh is 2x2
+    with SweepService(_cfg(), template=lanes[:1]) as svc:
+        with pytest.raises(CapacityError, match="exceeds"):
+            svc.submit(big)
+        f = svc.submit(lanes[0], mode="nexus")   # service still healthy
+        svc.drain(timeout=300)
+        assert f.result().completed
+
+
+def test_shutdown_nowait_fails_unresolved_futures(traffic):
+    lanes, modes = traffic
+    svc = SweepService(_cfg(), template=lanes, n_supers=2)
+    futs = [svc.submit(wl, mode=m) for wl, m in zip(lanes, modes)]
+    svc.shutdown(wait=False)
+    assert all(f.done() for f in futs), \
+        "shutdown(wait=False) must resolve every future"
+    for f in futs:
+        e = f.exception()
+        assert e is None or isinstance(e, ServiceError)
+    with pytest.raises(ServiceError):
+        svc.submit(lanes[0], mode=modes[0])
+
+
+def test_service_rejects_untraced_config():
+    with pytest.raises(ValueError, match="traced"):
+        SweepService(_cfg(traced_geometry=False))
+
+
+@pytest.mark.multidevice
+def test_service_sharded_soak(traffic, reference, n_devices):
+    """The same soak with the super-lane axis sharded over the forced
+    host devices: still bit-identical, still one engine."""
+    lanes, modes = traffic
+    machine.clear_engine_cache()
+    with SweepService(_cfg(), template=lanes, n_supers=4,
+                      slice_chunks=1, shard=True) as svc:
+        assert svc._n_dev == max(d for d in range(1, min(n_devices, 4) + 1)
+                                 if 4 % d == 0)
+        assert svc._n_dev > 1
+        futs = [svc.submit(wl, mode=m) for wl, m in zip(lanes, modes)]
+        svc.drain(timeout=600)
+        for i, (f, w) in enumerate(zip(futs, reference)):
+            _assert_same(f.result(), w, f"sharded lane {i}")
+        assert machine.engine_cache_size() == 1
+        assert svc.stats["n_refills"] > 0
