@@ -29,6 +29,12 @@ warm engine) vs sequential blocking per-lane ``run_many`` calls,
 recording steady-state lanes/s both ways plus the service's refill
 occupancy (see :mod:`benchmarks.serve_bench`).
 
+Both artifacts also carry a ``static_cost`` leg: every grid lane
+estimated by the pre-dispatch verifier's cost model
+(``repro.analysis.estimate_cycles``) and Spearman-rank-correlated
+against the measured cycles, so the artifact trail records how well the
+planners' default admission / packing hints track the real machine.
+
 Perf-regression gates (exit 1 on violation):
 
   * the smoke grid's per-lane cycle counts must equal the checked-in
@@ -50,7 +56,11 @@ Perf-regression gates (exit 1 on violation):
     baselines on one compiled engine, and on the dissimilar-runtime
     fig17 traffic the service's steady-state throughput must not drop
     below sequential ``run_many`` — less means continuous batching
-    stopped paying for its scheduling overhead.
+    stopped paying for its scheduling overhead;
+  * the static cost model's rank correlation with measured cycles must
+    not go negative — anti-correlation means ``estimate_cycles``
+    stopped tracking the machine and the planners' default hints are
+    actively misleading.
 
     PYTHONPATH=src python -m benchmarks.bench_ci --out experiments/ci
     PYTHONPATH=src python -m benchmarks.bench_ci --update-golden
@@ -125,6 +135,25 @@ def diff_cycles(want: dict, got: dict, *, want_name: str = "golden",
     return errors
 
 
+def static_cost_corr(points: list[tuple[str, float, int]]) -> dict:
+    """Rank-correlate static cycle estimates against measured cycles.
+
+    ``points`` rows are ``(label, estimated, measured)`` — one per grid
+    lane.  The artifact keeps the per-point table next to the Spearman
+    coefficient so a correlation regression names the grid points that
+    moved instead of reporting a bare number (JSON-safe: a degenerate
+    correlation becomes ``None``, not NaN).
+    """
+    from repro.analysis import rank_correlation
+    corr = rank_correlation([p[1] for p in points],
+                            [p[2] for p in points])
+    return dict(
+        rank_corr=None if corr != corr else round(corr, 4),
+        n_points=len(points),
+        points={label: dict(estimated=int(est), measured=int(meas))
+                for label, est, meas in points})
+
+
 def smoke_workloads():
     """The deterministic smoke grid inputs (fixed seeds: the golden gate
     depends on these being bit-stable)."""
@@ -196,6 +225,27 @@ def run_smoke() -> dict:
     table = table_of(grid)
     shard_drift = diff_cycles(table, table_of(grid_sh),
                               want_name="solo", got_name="sharded")
+    # static cost-model leg: estimate each lane with the pre-dispatch
+    # verifier's cycle model and rank-correlate against the measured
+    # grid.  Lanes are rebuilt with the same per-mode placement the
+    # harness used, so estimate and measurement describe the same
+    # compiled program; modes sharing a placement share an estimate
+    # (the model is mode-sound — see repro.analysis.cost).
+    from repro.analysis import estimate_cycles
+    est_cache: dict = {}
+    points = []
+    for wl in wls:
+        for mode, cell in table[wl.name].items():
+            placement = harness._placement_for(mode)
+            key = (wl.name, placement)
+            if key not in est_cache:
+                cfg = MachineConfig(width=2, height=2,
+                                    mem_words=wl.mem_words,
+                                    max_cycles=100_000)
+                est_cache[key] = estimate_cycles(wl.build(cfg, placement))
+            points.append((f"{wl.name}/{mode}", est_cache[key],
+                           cell["cycles"]))
+    static_cost = static_cost_corr(points)
     n_lanes = len(wls) * len(grid)
     return dict(meta=_meta(), wall_s=round(wall, 3),
                 wall_shard_s=round(wall_sh, 3),
@@ -205,6 +255,7 @@ def run_smoke() -> dict:
                 engine_cache_size=engines_solo,
                 engine_cache_size_shard=engines_shard,
                 lanes_per_engine=n_lanes / engines_solo,
+                static_cost=static_cost,
                 grid=table)
 
 
@@ -230,6 +281,16 @@ def run_fig17() -> dict:
     engines_shard = machine.engine_cache_size()
     shard_drift = diff_cycles(data, data_sh,
                               want_name="solo", got_name="sharded")
+    # static cost-model leg over the scaling grid: every (workload,
+    # mesh-size) point is its own compiled lane (placement is
+    # size-dependent), estimated by the pre-dispatch verifier and
+    # rank-correlated against the measured sweep.
+    from repro.analysis import estimate_cycles
+    points = [(f"{name}@{w}x{h}", estimate_cycles(wl),
+               data[name][f"{w}x{h}"]["cycles"])
+              for (w, h), name, wl in
+              fig17_scaling.build_grid(fig17_scaling._builders())]
+    static_cost = static_cost_corr(points)
     n_lanes = sum(len(v) for v in data.values())
     return dict(meta=_meta(), wall_s=round(wall, 3),
                 wall_shard_s=round(wall_sh, 3),
@@ -242,6 +303,7 @@ def run_fig17() -> dict:
                 packing_efficiency=report.pack.packing_efficiency,
                 unpacked_efficiency=report.pack.unpacked_efficiency,
                 n_waves=report.pack.n_waves,
+                static_cost=static_cost,
                 grid=data)
 
 
@@ -324,6 +386,14 @@ def main() -> int:
                         "(want 1): the sharded path silently recompiled")
     failures += check_golden(smoke, args.update_golden)
     failures += [f"smoke shard leg: {msg}" for msg in smoke["shard_drift"]]
+    sc = smoke["static_cost"]
+    print(f"smoke static cost model: rank_corr={sc['rank_corr']} over "
+          f"{sc['n_points']} grid points")
+    if sc["rank_corr"] is not None and sc["rank_corr"] < 0.0:
+        failures.append(
+            f"smoke static cost model anti-correlated with measured "
+            f"cycles (rank_corr={sc['rank_corr']}): estimate_cycles "
+            "stopped tracking the machine")
     svc = smoke["service"]
     print(f"smoke service leg: sequential {svc['seq_lanes_per_s']} lanes/s, "
           f"service {svc['service_lanes_per_s']} lanes/s "
@@ -350,6 +420,14 @@ def main() -> int:
               f"{fig17['n_waves']} waves)")
         failures += [f"fig17 shard leg: {msg}"
                      for msg in fig17["shard_drift"]]
+        sc17 = fig17["static_cost"]
+        print(f"fig17 static cost model: rank_corr={sc17['rank_corr']} "
+              f"over {sc17['n_points']} grid points")
+        if sc17["rank_corr"] is not None and sc17["rank_corr"] < 0.0:
+            failures.append(
+                f"fig17 static cost model anti-correlated with measured "
+                f"cycles (rank_corr={sc17['rank_corr']}): "
+                "estimate_cycles stopped tracking the machine")
         if fig17["engine_cache_size_shard"] != 1:
             failures.append("fig17 SHARDED sweep compiled "
                             f"{fig17['engine_cache_size_shard']} engines "

@@ -467,9 +467,12 @@ class RectPool:
         """Return a previously-allocated rectangle to the pool."""
         x, y = int(origin[0]), int(origin[1])
         w, h = int(geom[0]), int(geom[1])
-        if self._allocated.pop((x, y), None) != (w, h):
+        if self._allocated.get((x, y)) != (w, h):
+            # reject WITHOUT mutating: a mismatched geometry must not
+            # silently drop the live allocation it collided with
             raise ValueError(f"release of unallocated rect "
                              f"{(x, y, w, h)}")
+        del self._allocated[(x, y)]
         if not self._allocated:
             # emptied: collapse whatever fragmentation the tenant mix
             # left behind (pairwise merging alone cannot always undo an
@@ -727,6 +730,8 @@ def plan_shards(geoms, n_devices: int, *, cycle_hints=None
         raise ValueError("empty geometry list")
     if n_devices < 1:
         raise ValueError(f"bad device count {n_devices}")
+    if cycle_hints is not None:
+        cycle_hints = validate_hints(cycle_hints, len(geoms))
     load = shard_loads(geoms, cycle_hints)
     b = len(geoms)
     cap = -(-b // n_devices)                     # lanes per device
@@ -792,6 +797,11 @@ def plan_waves(geoms, *, super_geom=None, groups=None, cycle_hints=None,
     """
     geoms = [(int(w), int(h)) for (w, h) in geoms]
     parallel = max(1, int(parallel))
+    if cycle_hints is not None:
+        # Validate up front: the homogeneous shortcut below may never
+        # consume the hints, but a malformed list should fail loudly
+        # either way (not deep inside a later planner).
+        cycle_hints = validate_hints(cycle_hints, len(geoms))
     if super_geom is None:
         super_geom = (max(w for w, _ in geoms), max(h for _, h in geoms))
     group_list = [None] * len(geoms) if groups is None else list(groups)
@@ -878,6 +888,40 @@ def _pad_batch(wb: BatchedWorkloads, p: int, q: int, m: int, n: int,
         sub_ids=sub_ids, local_ids=local_ids)
 
 
+def static_cycle_hints(workloads, geoms=None, *,
+                       homogeneous: bool = False) -> list[float] | None:
+    """Default ``cycle_hints`` from the static cost model
+    (:func:`repro.analysis.estimate_cycles`), replacing the
+    inverse-mesh-area proxy as the planners' load signal.
+
+    Returns None — fall back to the proxy — when the signal is
+    unavailable (non-compiled lanes without liftable arrays) or useless
+    (homogeneous batches keep the wave planner's identity one-wave plan
+    unless ``homogeneous=True``, which shard balancing sets: LPT over
+    per-lane estimates beats a uniform proxy even on same-size lanes).
+    Hints only reorder scheduling — never lane results — so any
+    analysis failure degrades to the proxy instead of failing the run.
+    """
+    wls = list(workloads)
+    if not wls:
+        return None
+    if not homogeneous:
+        if geoms is None:
+            geoms = [getattr(wl, "geom", None) for wl in wls]
+            if any(g is None for g in geoms):
+                return None
+        if len({(int(w), int(h)) for (w, h) in geoms}) <= 1:
+            return None
+    needed = ("prog", "static_ams", "amq_len", "mem_val", "mem_meta")
+    if not all(all(hasattr(wl, a) for a in needed) for wl in wls):
+        return None
+    try:
+        from repro.analysis import static_hints
+        return static_hints(wls)
+    except Exception:
+        return None
+
+
 def pack_schedule(workloads, modes=None, *, super_geom=None,
                   cycle_hints=None, parallel: int = 1):
     """Plan + pack the full co-schedule for ``run_many(pack=True)``.
@@ -901,6 +945,8 @@ def pack_schedule(workloads, modes=None, *, super_geom=None,
     mode_list = _resolve_modes(modes, len(wls))
     if super_geom is None:
         super_geom = (max(w for w, _ in geoms), max(h for _, h in geoms))
+    if cycle_hints is None:
+        cycle_hints = static_cycle_hints(wls, geoms)
     waves = plan_waves(geoms, super_geom=super_geom, groups=mode_list,
                        cycle_hints=cycle_hints, parallel=parallel)
     batches = [

@@ -89,6 +89,10 @@ class CompiledWorkload:
     # (see repro.core.batch.pack_workloads); addresses and values (and
     # mem_meta[..., 0], which is always a count/address/value) never move.
     meta_pe: np.ndarray | None = None
+    # (N,) builder bump-pointer highwater: words >= alloc_top[pe] were
+    # never allocated, so a static analysis can flag reads past it
+    # (repro.analysis uses this to catch truncated/corrupted descriptors).
+    alloc_top: np.ndarray | None = None
 
     def check(self, mem_val: np.ndarray) -> bool:
         return bool(np.array_equal(self.read_result(mem_val), self.expected))
@@ -146,7 +150,8 @@ class _Builder:
             prog=prog, static_ams=sams, amq_len=alen, mem_val=self.mem_val,
             mem_meta=self.mem_meta, read_result=read_result,
             expected=expected, n_static_ams=total, name=name,
-            geom=(self.cfg.width, self.cfg.height), meta_pe=self.meta_pe)
+            geom=(self.cfg.width, self.cfg.height), meta_pe=self.meta_pe,
+            alloc_top=self.top.copy())
 
 
 def _place_rows(rowptr, col, n_pes, strategy, n_cols):

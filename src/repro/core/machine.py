@@ -1401,6 +1401,14 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
             # aggregation below indexes by input lane.
             from repro.core.batch import validate_hints
             cycle_hints = validate_hints(cycle_hints, len(wls))
+        else:
+            # No measured oracle: the static cost model supplies the
+            # planners' default load signal for heterogeneous batches
+            # (repro.analysis.estimate_cycles, replacing the
+            # inverse-mesh-area proxy).  Hints steer scheduling only;
+            # lane results are bit-identical either way.
+            from repro.core.batch import static_cycle_hints
+            cycle_hints = static_cycle_hints(wls)
         # A sharded schedule may run up to one super-lane per device
         # side by side without coupling their makespans, so the wave
         # planner gets the device count as its parallel width (capped
@@ -1410,6 +1418,19 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
                                               super_geom=super_geom,
                                               cycle_hints=cycle_hints,
                                               parallel=parallel)
+        # Certify the isolation property co-tenancy rests on: after
+        # rebasing, no AM or meta_pe word may target a PE outside its
+        # own sub-lane rectangle (west-first routes never leave the
+        # src->dst bbox, so rectangle containment => no cross-lane
+        # traffic).  Cheap vectorized scan; catches both packer bugs
+        # and post-pack corruption before any cycle runs.
+        from repro.analysis.checks import (check_packed_batch,
+                                           raise_on_findings)
+        for wb in batches:
+            raise_on_findings(
+                check_packed_batch(wb),
+                context="packed batch failed rectangle-confinement "
+                        "certification")
         if pack_stats is not None:
             pack_stats.update(stats)
         results: list = [None] * len(wls)
@@ -1459,6 +1480,14 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
                 plan=[w["plan"] for w in wave_shard_stats])
         return results
     if not isinstance(workloads, BatchedWorkloads):
+        workloads = list(workloads)
+        if cycle_hints is None and shard:
+            # Default the shard balancer's load signal from the static
+            # cost model (homogeneous batches included: LPT over
+            # per-lane estimates beats the uniform area proxy there).
+            from repro.core.batch import static_cycle_hints
+            cycle_hints = static_cycle_hints(workloads, geoms,
+                                             homogeneous=True)
         workloads = stack_workloads(workloads, geoms=geoms)
         geoms = None        # now carried on the batch
     n_max = workloads.n_pes

@@ -48,6 +48,12 @@ class SweepRequest:
       super-lanes (``geoms`` must then be None: the packer places lanes).
     * ``shard`` — lane-axis device sharding over ``jax.devices()``.
     * ``chunk`` — cycles per jitted engine chunk.
+    * ``validate`` — pre-dispatch static verification tier
+      (:mod:`repro.analysis`): ``"static"`` (default) rejects lanes with
+      error-severity findings (malformed AMs, co-tenancy escapes,
+      provable capacity violations) with a
+      :class:`~repro.analysis.WorkloadValidationError`; ``"strict"``
+      also fails on warnings; ``"off"`` dispatches unchecked.
 
     Sequences are frozen to tuples on construction so a request is an
     immutable value: submitting it twice (or to the sweep service and
@@ -61,6 +67,7 @@ class SweepRequest:
     super_geom: tuple | None = None
     shard: bool = False
     chunk: int = 512
+    validate: str = "static"
 
     def __post_init__(self):
         from repro.core.batch import BatchedWorkloads
@@ -76,6 +83,17 @@ class SweepRequest:
         if self.super_geom is not None:
             w, h = self.super_geom
             object.__setattr__(self, "super_geom", (int(w), int(h)))
+        if self.validate not in ("off", "static", "strict"):
+            raise ValueError(
+                f"validate={self.validate!r}: expected 'off', 'static' or "
+                "'strict'")
+        if self.cycle_hints is not None:
+            # Fail the request at construction, not deep inside planning
+            # with an opaque shape error.
+            from repro.core.batch import validate_hints
+            object.__setattr__(
+                self, "cycle_hints",
+                tuple(validate_hints(self.cycle_hints, self.n_lanes)))
 
     @property
     def n_lanes(self) -> int:
@@ -187,6 +205,14 @@ def sweep(cfg: MachineConfig, request: SweepRequest) -> SweepReport:
     wls = (request.workloads if isinstance(request.workloads,
                                            BatchedWorkloads)
            else list(request.workloads))
+    if request.validate != "off" and not isinstance(wls, BatchedWorkloads):
+        # Static pre-dispatch verification (repro.analysis): reject
+        # malformed lanes here, with per-lane diagnostics, instead of
+        # letting them poison a shared fabric at runtime.
+        from repro.analysis import validate_request
+        validate_request(wls, modes=request.modes,
+                         strict=(request.validate == "strict"),
+                         stream_wait_cap=cfg.stream_wait_cap)
     results = machine._run_many_impl(
         cfg, wls,
         modes=None if request.modes is None else list(request.modes),

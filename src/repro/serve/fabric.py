@@ -164,20 +164,42 @@ class SweepService:
         ``mode`` is a :data:`repro.core.machine.FABRIC_MODES` name or
         bitmask (default: ``cfg``'s flags).  Only same-mode lanes
         co-tenant a super-lane, exactly like ``run_many(pack=True)``.
-        ``cycle_hint`` (measured cycles from a prior run) replaces the
-        inverse-mesh-area proxy in the longest-first admission order.
+        ``cycle_hint`` (measured cycles from a prior run) overrides the
+        static cost model (:func:`repro.analysis.estimate_cycles`) in
+        the longest-first admission order.
+
+        The workload is statically verified before it is queued
+        (:func:`repro.analysis.check_workload`): a lane with
+        error-severity findings gets a Future already failed with
+        :class:`~repro.analysis.WorkloadValidationError` — co-tenants
+        and the service itself are unaffected.
         """
         m = mode_code(self._base_cfg) if mode is None else resolve_mode(mode)
         geom = getattr(workload, "geom", None)
         if geom is None:
             raise ValueError("submit() needs a compiled workload "
                              "(repro.core.compiler records wl.geom)")
+        fut: Future = Future()
+        from repro.analysis import (WorkloadValidationError, check_workload,
+                                    error_findings, estimate_cycles)
+        errs = error_findings(check_workload(
+            workload, stream_wait_cap=self._base_cfg.stream_wait_cap))
+        if errs:
+            # The bad lane fails its OWN future; nothing is enqueued, so
+            # the service and every co-tenant stay healthy.
+            fut.set_exception(WorkloadValidationError(
+                errs, context="submit() rejected the workload"))
+            return fut
         if self._built:
             self._check_fits(workload, geom)
         w, h = int(geom[0]), int(geom[1])
-        load = (float(cycle_hint) if cycle_hint is not None
-                else 1.0 / float(w * h))
-        fut: Future = Future()
+        if cycle_hint is not None:
+            load = float(cycle_hint)
+        else:
+            try:
+                load = estimate_cycles(workload)
+            except Exception:
+                load = 1.0 / float(w * h)   # last-resort area proxy
         with self._cond:
             if self._closing:
                 raise ServiceError(

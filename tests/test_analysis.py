@@ -1,0 +1,321 @@
+"""Static analysis (repro.analysis): mutation teeth + cost-model wiring.
+
+Two halves:
+
+* **Mutation suite** — every seeded corruption class the ISSUE names
+  (out-of-mesh dst, bad PC target, invalid mode bits, meta_pe mismatch,
+  rectangle escape after packing, over-capacity stream fan-in, provable
+  pending-FIFO overflow) must be rejected *statically* with a per-lane
+  diagnostic, while the real benchmark workloads pass clean.
+* **Wiring** — the static cost model is the planners' default
+  ``cycle_hints`` source; hints steer scheduling only (lane results are
+  pinned bit-identical by the golden suites); `sweep()` rejects a
+  corrupted lane pre-dispatch; `SweepService.submit()` fails only the
+  bad lane's future and stays healthy.
+"""
+import numpy as np
+import pytest
+
+from repro.core import am, compiler, machine
+from repro.core.machine import MachineConfig
+
+RNG = np.random.default_rng(5)
+
+
+def _cfg(w=4, h=4, **kw):
+    kw.setdefault("mem_words", 2048)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(width=w, height=h, **kw)
+
+
+def _spmv(cfg=None):
+    cfg = cfg or _cfg()
+    a = compiler.random_sparse(16, 16, 0.3, RNG)
+    x = RNG.integers(-3, 4, size=(16,))
+    return compiler.build_spmv(a, x, cfg)
+
+
+def _spmspm(cfg=None):
+    cfg = cfg or _cfg()
+    a = compiler.random_sparse(16, 16, 0.4, RNG)
+    b = compiler.random_sparse(16, 16, 0.4, RNG)
+    return compiler.build_spmspm(a, b, cfg)
+
+
+def _bfs(cfg=None):
+    from benchmarks.workloads import small_world_graph
+    rp, col = small_world_graph(24, 4, 3)
+    return compiler.build_bfs(rp, col, 0, cfg or _cfg())
+
+
+def _error_codes(wl, **kw):
+    from repro.analysis import check_workload
+    return {f.code for f in check_workload(wl, **kw)
+            if f.severity == "error"}
+
+
+def _live_slot(wl):
+    pe = int(np.argmax(np.asarray(wl.amq_len)))
+    assert wl.amq_len[pe] > 0
+    return pe
+
+
+# ----------------------------------------------------------------------
+# clean pass: real compiler output carries zero error/warn findings
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("build", [_spmv, _spmspm, _bfs],
+                         ids=["spmv", "spmspm", "bfs"])
+def test_benchmark_workloads_pass_clean(build):
+    from repro.analysis import check_workload
+    findings = check_workload(build())
+    assert [f for f in findings if f.severity in ("error", "warn")] == []
+
+
+def test_estimates_are_positive_and_cached(
+):
+    from repro.analysis import estimate_cycles, lift
+    wl = _spmv()
+    est = estimate_cycles(wl)
+    assert est > 0
+    assert lift(wl) is lift(wl), "summary must be memoized per workload"
+
+
+# ----------------------------------------------------------------------
+# mutation suite: seeded corruptions, each caught statically
+# ----------------------------------------------------------------------
+def test_mutation_out_of_mesh_dst():
+    wl = _spmv()
+    wl.static_ams[_live_slot(wl), 0, am.F_DST0] = wl.geom[0] * wl.geom[1]
+    assert "wf.dst-out-of-mesh" in _error_codes(wl)
+
+
+def test_mutation_pc_off_by_one():
+    wl = _spmv()
+    wl.static_ams[_live_slot(wl), 0, am.F_PC] = wl.prog.shape[0]
+    assert "wf.pc-out-of-range" in _error_codes(wl)
+
+
+def test_mutation_bad_branch_target():
+    wl = _spmv()
+    wl.prog[0, am.C_NEXT_PC] = wl.prog.shape[0] + 3
+    assert "wf.pc-out-of-range" in _error_codes(wl)
+
+
+def test_mutation_invalid_opcode():
+    wl = _spmv()
+    wl.static_ams[_live_slot(wl), 0, am.F_OP] = am.N_OPCODES + 1
+    assert "wf.op-invalid" in _error_codes(wl)
+
+
+def test_mutation_stripped_meta_pe_mask():
+    wl = _bfs()                       # BFS consumes meta_pe-marked words
+    wl.meta_pe = np.zeros_like(wl.meta_pe)
+    assert "wf.meta-pe-unmarked" in _error_codes(wl)
+
+
+def test_mutation_missing_meta_pe_table():
+    wl = _bfs()
+    wl.meta_pe = None
+    assert "wf.meta-pe-missing" in _error_codes(wl)
+
+
+def test_mutation_meta_pe_target_off_mesh():
+    wl = _bfs()
+    pes, addrs = np.nonzero(wl.meta_pe)
+    wl.mem_meta[pes[0], addrs[0], 1] = 10_000
+    assert "wf.meta-pe-out-of-mesh" in _error_codes(wl)
+
+
+def test_mutation_over_capacity_stream_fanin():
+    wl = _spmspm()                    # STREAM-heavy, static fan-in
+    assert "capacity.stream-fanin" in _error_codes(wl, stream_wait_cap=3)
+    # the same workload is certified under the real default cap
+    assert _error_codes(wl) == set()
+
+
+def test_mutation_provable_pend_fifo_overflow(monkeypatch):
+    # Break the reservation discipline itself: the stream gate may then
+    # push past decode/compute reservations (the machine.py proof's
+    # premise fails), so the checker must flag ANY workload as unsafe.
+    monkeypatch.setattr(machine, "STREAM_THROTTLE", machine.PEND_CAP)
+    assert "capacity.reservation-discipline" in _error_codes(_spmv())
+
+
+def test_mutation_rect_escape_after_packing():
+    from repro.analysis import check_packed_batch
+    from repro.core.batch import pack_workloads
+    lanes = [_spmv(_cfg(2, 2, mem_words=4096)) for _ in range(2)]
+    batch = pack_workloads(lanes, super_geom=(4, 2))
+    # the honest pack certifies clean...
+    assert check_packed_batch(batch) == []
+    # ...then corrupt one rebased AM to cross into the co-tenant's
+    # rectangle: same super-lane, different sub_ids label.
+    b = 0
+    src = int(np.argmax(np.asarray(batch.amq_len[b])))
+    other = int(np.nonzero(np.asarray(batch.sub_ids[b])
+                           != batch.sub_ids[b, src])[0][0])
+    batch.static_ams[b, src, 0, am.F_DST0] = other
+    codes = {f.code for f in check_packed_batch(batch)}
+    assert "cotenancy.rect-escape" in codes
+
+
+def test_packed_run_rejects_corrupted_batch(monkeypatch):
+    """run_many(pack=True) certifies rectangle confinement pre-dispatch."""
+    from repro.analysis import WorkloadValidationError
+    from repro.core import batch as batch_mod
+
+    real_pack = batch_mod.pack_workloads
+
+    def corrupting_pack(*a, **kw):
+        wb = real_pack(*a, **kw)
+        b = 0
+        src = int(np.argmax(np.asarray(wb.amq_len[b])))
+        other = int(np.nonzero(np.asarray(wb.sub_ids[b])
+                               != wb.sub_ids[b, src])[0][0])
+        wb.static_ams[b, src, 0, am.F_DST0] = other
+        return wb
+
+    monkeypatch.setattr(batch_mod, "pack_workloads", corrupting_pack)
+    cfg = _cfg(4, 2, traced_geometry=True, traced_modes=True)
+    lanes = [_spmv(_cfg(2, 2, mem_words=4096)) for _ in range(2)]
+    with pytest.raises(WorkloadValidationError, match="rect-escape"):
+        machine.run_many(cfg, lanes, pack=True, super_geom=(4, 2))
+
+
+# ----------------------------------------------------------------------
+# sweep() pre-dispatch validation
+# ----------------------------------------------------------------------
+def test_sweep_rejects_corrupted_lane_with_lane_diagnostic():
+    from repro.analysis import WorkloadValidationError
+    from repro.core.sweep import SweepRequest, sweep
+    good, bad = _spmv(), _spmv()
+    bad.static_ams[_live_slot(bad), 0, am.F_DST0] = 999
+    req = SweepRequest(workloads=[good, bad])
+    with pytest.raises(WorkloadValidationError) as ei:
+        sweep(_cfg(), req)
+    assert any(f.lane == 1 and f.code == "wf.dst-out-of-mesh"
+               for f in ei.value.findings)
+    assert all(f.lane != 0 for f in ei.value.findings), \
+        "the clean lane must carry no findings"
+
+
+def test_sweep_rejects_invalid_mode_bits():
+    from repro.analysis import WorkloadValidationError
+    from repro.core.sweep import SweepRequest, sweep
+    req = SweepRequest(workloads=[_spmv()], modes=[9])   # bit 3 undefined
+    with pytest.raises(WorkloadValidationError) as ei:
+        sweep(_cfg(), req)
+    assert any(f.code == "wf.mode-invalid" and f.lane == 0
+               for f in ei.value.findings)
+
+
+def test_sweep_validate_off_skips_static_checks():
+    from repro.core.sweep import SweepRequest, sweep
+    bad = _spmv()
+    bad.static_ams[_live_slot(bad), 0, am.F_DST0] = 999
+    req = SweepRequest(workloads=[bad], validate="off")
+    # dispatches (and runs) — the engine clips the rogue destination, so
+    # this documents exactly the silent-runtime behavior validation
+    # exists to replace.
+    report = sweep(_cfg(traced_geometry=True, traced_modes=True), req)
+    assert len(report) == 1
+
+
+def test_sweep_request_rejects_unknown_validate_tier():
+    from repro.core.sweep import SweepRequest
+    with pytest.raises(ValueError, match="validate"):
+        SweepRequest(workloads=[object()], validate="paranoid")
+
+
+# ----------------------------------------------------------------------
+# cycle_hints early validation (satellite): clear errors, all 3 surfaces
+# ----------------------------------------------------------------------
+def test_sweep_request_validates_hints_early():
+    from repro.core.sweep import SweepRequest
+    with pytest.raises(ValueError, match="2 cycle hints for 3 lanes"):
+        SweepRequest(workloads=[object()] * 3, cycle_hints=[1.0, 2.0])
+    with pytest.raises(ValueError, match="non-negative"):
+        SweepRequest(workloads=[object()] * 2, cycle_hints=[1.0, -2.0])
+    with pytest.raises(ValueError, match="non-negative"):
+        SweepRequest(workloads=[object()], cycle_hints=[float("nan")])
+
+
+def test_plan_waves_validates_hints_even_on_homogeneous_shortcut():
+    from repro.core.batch import plan_waves
+    geoms = [(4, 4)] * 3
+    with pytest.raises(ValueError, match="cycle hints for"):
+        plan_waves(geoms, cycle_hints=[1.0])            # wrong length
+    with pytest.raises(ValueError, match="non-negative"):
+        # parallel>1 would short-circuit past shard_loads without the
+        # eager check
+        plan_waves(geoms, cycle_hints=[1.0, -1.0, 2.0], parallel=4)
+
+
+def test_plan_shards_validates_hints():
+    from repro.core.batch import plan_shards
+    with pytest.raises(ValueError, match="cycle hints for"):
+        plan_shards([(2, 2)] * 4, 2, cycle_hints=[1.0])
+    with pytest.raises(ValueError, match="non-negative"):
+        plan_shards([(2, 2)] * 2, 2, cycle_hints=[-1.0, 1.0])
+
+
+# ----------------------------------------------------------------------
+# static cost model: the planners' default hints source
+# ----------------------------------------------------------------------
+def test_static_hints_are_pack_schedule_default():
+    from repro.analysis import static_hints
+    from repro.core.batch import pack_schedule
+    lanes = [_spmv(_cfg(2, 2, mem_words=4096)),
+             _spmspm(_cfg(4, 4)), _spmv(_cfg(4, 4))]
+    _, waves_default, _ = pack_schedule(lanes)
+    _, waves_hinted, _ = pack_schedule(
+        lanes, cycle_hints=static_hints(lanes))
+    assert waves_default == waves_hinted, \
+        "unhinted pack_schedule must plan on the static estimates"
+    # and the estimates genuinely differ from the area proxy's ordering
+    est = static_hints(lanes)
+    assert len(est) == 3 and all(e > 0 for e in est)
+
+
+def test_homogeneous_batch_keeps_identity_plan():
+    from repro.core.batch import plan_waves, static_cycle_hints
+    # the wave planner's pinned homogeneous one-wave shortcut must not
+    # be disturbed by hint defaulting (static_cycle_hints declines)
+    lanes = [_spmv(_cfg(4, 4)) for _ in range(3)]
+    assert static_cycle_hints(lanes) is None
+    assert plan_waves([(4, 4)] * 3) == [[0, 1, 2]]
+
+
+def test_static_hints_skip_non_compiled_lanes():
+    from repro.core.batch import static_cycle_hints
+    assert static_cycle_hints([(1, 2, 3)], [(2, 2), (4, 4)]) is None
+
+
+def test_rank_correlation():
+    from repro.analysis import rank_correlation
+    assert rank_correlation([1, 2, 3, 4], [10, 20, 30, 40]) == \
+        pytest.approx(1.0)
+    assert rank_correlation([1, 2, 3, 4], [4, 3, 2, 1]) == \
+        pytest.approx(-1.0)
+    assert np.isnan(rank_correlation([1.0], [2.0]))
+
+
+# ----------------------------------------------------------------------
+# service admission: a bad lane fails ONLY its own future
+# ----------------------------------------------------------------------
+def test_service_submit_fails_only_the_corrupted_lane():
+    from repro.analysis import WorkloadValidationError
+    from repro.serve import SweepService
+    cfg = _cfg(mem_words=1024)
+    good = _spmv(_cfg(2, 2, mem_words=1024))
+    bad = _spmv(_cfg(2, 2, mem_words=1024))
+    bad.static_ams[_live_slot(bad), 0, am.F_DST0] = 999
+    with SweepService(cfg, template=[good]) as svc:
+        f_bad = svc.submit(bad)
+        assert f_bad.done(), "rejection must be immediate (pre-queue)"
+        with pytest.raises(WorkloadValidationError, match="dst-out-of-mesh"):
+            f_bad.result()
+        f_good = svc.submit(good)     # service unaffected
+        svc.drain(timeout=300)
+        assert f_good.result().completed
+        assert svc.stats["n_retired"] == 1

@@ -1,0 +1,113 @@
+"""RectPool edge cases: exact fit, interleaved release, zero-area reject.
+
+The sweep service's mid-wave refill leans on three allocator properties
+that the soak tests only exercise statistically: an exact-fit request
+must succeed with zero waste, interleaved (non-LIFO) release orders must
+keep the free list consistent until the full-reset-on-empty collapses
+fragmentation, and degenerate zero-area requests must be rejected loudly
+rather than corrupting the free list.
+"""
+import pytest
+
+from repro.core.batch import RectPool
+
+
+def _free_area(pool: RectPool) -> int:
+    return sum(w * h for (_, _, w, h) in pool.free)
+
+
+def _rects_disjoint(rects) -> bool:
+    for i, (ax, ay, aw, ah) in enumerate(rects):
+        for (bx, by, bw, bh) in rects[i + 1:]:
+            if ax < bx + bw and bx < ax + aw and ay < by + bh and by < ay + ah:
+                return False
+    return True
+
+
+class TestExactFit:
+    def test_full_mesh_exact_fit(self):
+        pool = RectPool((4, 4))
+        assert pool.alloc((4, 4)) == (0, 0)
+        assert pool.free == []          # zero waste
+        assert pool.n_allocated == 1
+        assert pool.alloc((1, 1)) is None
+
+    def test_tiling_exact_fits_fill_the_mesh(self):
+        pool = RectPool((4, 4))
+        origins = [pool.alloc((2, 2)) for _ in range(4)]
+        assert None not in origins
+        assert len(set(origins)) == 4   # disjoint quadrants
+        assert _free_area(pool) == 0
+        assert pool.alloc((1, 1)) is None
+
+    def test_exact_fit_prefers_smallest_free_rect(self):
+        pool = RectPool((8, 2))
+        a = pool.alloc((5, 2))          # leaves a 3x2 remainder
+        assert a == (0, 0)
+        assert pool.free == [(5, 0, 3, 2)]
+        # best-area-fit: the 3x2 request takes the remainder exactly
+        assert pool.alloc((3, 2)) == (5, 0)
+        assert pool.free == []
+
+
+class TestInterleavedRelease:
+    def test_release_out_of_order_then_realloc(self):
+        pool = RectPool((4, 4))
+        a = pool.alloc((2, 2))
+        b = pool.alloc((2, 2))
+        c = pool.alloc((2, 2))
+        # release the MIDDLE tenant first, then the first — interleaved
+        # relative to allocation order
+        pool.release(b, (2, 2))
+        pool.release(a, (2, 2))
+        assert pool.n_allocated == 1
+        assert _free_area(pool) == 12
+        assert _rects_disjoint(pool.free + [c + (2, 2)])
+        # freed space is allocatable again while c still runs
+        d = pool.alloc((2, 2))
+        e = pool.alloc((2, 2))
+        assert None not in (d, e)
+        assert _rects_disjoint([d + (2, 2), e + (2, 2), c + (2, 2)])
+
+    def test_full_reset_on_empty_collapses_fragmentation(self):
+        pool = RectPool((5, 5))
+        a = pool.alloc((3, 3))
+        b = pool.alloc((2, 2))
+        c = pool.alloc((2, 2))
+        # interleaved: c, a, b — pairwise merging alone cannot always
+        # rebuild the full mesh from this order, the empty reset must
+        pool.release(c, (2, 2))
+        pool.release(a, (3, 3))
+        pool.release(b, (2, 2))
+        assert pool.n_allocated == 0
+        assert pool.free == [(0, 0, 5, 5)]
+        # and the emptied pool re-admits a full-mesh lane
+        assert pool.alloc((5, 5)) == (0, 0)
+
+    def test_release_of_unallocated_rect_raises(self):
+        pool = RectPool((4, 4))
+        a = pool.alloc((2, 2))
+        with pytest.raises(ValueError, match="unallocated"):
+            pool.release((3, 3), (1, 1))
+        with pytest.raises(ValueError, match="unallocated"):
+            pool.release(a, (2, 1))     # right origin, wrong geometry
+        # double release
+        pool.release(a, (2, 2))
+        with pytest.raises(ValueError, match="unallocated"):
+            pool.release(a, (2, 2))
+
+
+class TestZeroArea:
+    @pytest.mark.parametrize("geom", [(0, 2), (2, 0), (0, 0), (-1, 3)])
+    def test_zero_area_request_rejected(self, geom):
+        pool = RectPool((4, 4))
+        with pytest.raises(ValueError, match="bad lane geometry"):
+            pool.alloc(geom)
+        # free list untouched by the rejected request
+        assert pool.free == [(0, 0, 4, 4)]
+        assert pool.n_allocated == 0
+
+    @pytest.mark.parametrize("geom", [(0, 4), (4, 0), (0, 0)])
+    def test_zero_area_pool_rejected(self, geom):
+        with pytest.raises(ValueError, match="bad pool geometry"):
+            RectPool(geom)
