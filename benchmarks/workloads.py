@@ -61,6 +61,25 @@ def small_world_graph(nv, k, rng_seed):
     return rp, np.array(cols, dtype=np.int64)
 
 
+def pointer_chase_graph(n_nodes, seed=3):
+    """A SCRAMBLED chain: node i's single successor is the next node of
+    a random permutation, so BFS over it is a serial pointer chase whose
+    every hop is a long lone flight across the mesh — the workload class
+    the event-compressed engine (``MachineConfig.fast_forward``) exists
+    for.  Returns ``(rowptr, col, src)`` for ``compiler.build_bfs``.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_nodes)
+    rowptr = np.zeros((n_nodes + 1,), dtype=np.int64)
+    cols = []
+    succ = {int(perm[i]): int(perm[i + 1]) for i in range(n_nodes - 1)}
+    for i in range(n_nodes):
+        if i in succ:
+            cols.append(succ[i])
+        rowptr[i + 1] = len(cols)
+    return rowptr, np.array(cols, dtype=np.int64), int(perm[0])
+
+
 @dataclasses.dataclass
 class Workload:
     name: str

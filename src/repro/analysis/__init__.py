@@ -43,7 +43,8 @@ from repro.analysis.checks import (Finding, WorkloadValidationError,
                                    check_packed_batch, check_workload,
                                    error_findings, validate_request)
 from repro.analysis.cost import (cost_report, estimate_cycles,
-                                 rank_correlation, static_hints)
+                                 fast_forward_bound, rank_correlation,
+                                 static_hints)
 from repro.analysis.ir import ChainSummary, lift
 
 __all__ = [
@@ -51,4 +52,5 @@ __all__ = [
     "check_workload", "check_mode", "check_capacity",
     "check_packed_batch", "error_findings", "validate_request",
     "estimate_cycles", "static_hints", "cost_report", "rank_correlation",
+    "fast_forward_bound",
 ]

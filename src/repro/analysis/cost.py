@@ -27,8 +27,21 @@ import numpy as np
 
 from repro.analysis.ir import ChainSummary, lift
 
-__all__ = ["estimate_cycles", "static_hints", "cost_report",
-           "rank_correlation"]
+__all__ = ["estimate_cycles", "fast_forward_bound", "static_hints",
+           "cost_report", "rank_correlation"]
+
+
+def fast_forward_bound(width: int, height: int) -> int:
+    """Mesh-diameter ceiling on any single event-compressed advance.
+
+    The fast-forward engine (:mod:`repro.core.fastforward`) teleports a
+    lone in-flight message by its remaining west-first hop distance —
+    which can never exceed the mesh diameter ``(width-1) + (height-1)``
+    (a Valiant waypoint splits the trip into two legs, each compressed
+    separately, so the per-advance bound still holds).  The property
+    suite cross-checks every compressed delta against this static bound.
+    """
+    return max(0, int(width) - 1) + max(0, int(height) - 1)
 
 
 def estimate_cycles(wl: Any, summary: ChainSummary | None = None) -> float:

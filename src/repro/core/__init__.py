@@ -15,5 +15,5 @@ from repro.core.machine import (  # noqa: F401
     MachineConfig, RunResult, run, run_many,
 )
 from repro.core.sweep import (  # noqa: F401
-    PackStats, ShardStats, SweepReport, SweepRequest, sweep,
+    EngineTelemetry, PackStats, ShardStats, SweepReport, SweepRequest, sweep,
 )

@@ -1,0 +1,242 @@
+"""Event-compressed stepping: idle-cycle fast-forward for the engine.
+
+The engine is tick-based — every ``lax.while_loop`` iteration steps every
+PE of every lane — yet on the paper's irregular workloads most ticks are
+pure message transit: a single in-flight active message crossing the
+mesh while every PE waits (8x8 utilization is 10–23% on the fig17 grid,
+i.e. ~80–90% of PE-steps are dead work).  A full event queue does not
+map to XLA, but those transit stretches are *provably* inert: when a
+sub-lane's only state is one buffered message in flight (nothing
+pending, queued, streaming, or left to inject) and no PE along the
+remaining west-first path can intercept it, every intermediate tick is
+determined in closed form.  This module compresses them: it teleports
+the message to its arrival buffer and bumps ``cycle``/``rr``/``st_hops``
+by the exact hop distance in one masked vector step.
+
+Bit-identity is by construction, not by tolerance:
+
+* eligibility is a *conservative proof* — any sub-lane the analysis
+  cannot prove quiet (more than one flit, a non-empty FIFO, a possible
+  opportunistic interception en route, an out-of-mesh destination, or a
+  compressed advance of < 2 cycles) steps plainly;
+* the closed-form path below reproduces the router's own west-first +
+  credit-adaptive staircase *exactly* under the lone-flight precondition
+  (all credits available, so the adaptive tie-break degenerates to the
+  deterministic ``|dx| >= |dy|`` rule);
+* the advance is capped by the per-call cycle budget and ``max_cycles``,
+  so sliced (SweepService) and capped runs stay exact too.
+
+``tests/test_fast_forward.py`` pins ff==plain bit-identical across the
+workload x mode x size grid (packed, sharded, and service-sliced
+variants included) and property-tests the path closed form against a
+pure-Python reference of the routing rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.am import (C_OP, F_DST0, F_HOPS, F_OP, F_OP1C, F_OP2C,
+                           F_PC, F_VIA, OP_NOP, is_alu_op)
+from repro.core.machine import (MODE_OPPORTUNISTIC, P_E, P_N, P_S, P_W,
+                                PORTS, MachineConfig, MachineState)
+
+__all__ = ["make_fast_forward", "make_lone_probe", "path_position"]
+
+
+def path_position(xp, hx, hy, ex, ey, t):
+    """Position after ``t`` hops of the lone-flight route (hx,hy)->(ex,ey).
+
+    ``xp`` is the array namespace (``numpy`` or ``jax.numpy``) — the
+    engine and the property-test reference share this one
+    implementation.  Mirrors :func:`machine._make_cycle`'s ``route``
+    under the lone-flight precondition (every credit available):
+
+    * westbound (dx < 0): west-first takes ALL W hops before any N/S;
+    * eastbound: the adaptive tie-break degenerates to "step E iff
+      remaining |dx| >= remaining |dy|" — a deterministic staircase that
+      alternates (N/S first when |dy| leads) until one axis is spent,
+      then runs the other straight.
+
+    Returns ``(px, py)`` arrays.  Only meaningful for 0 <= t <=
+    |dx|+|dy|.
+    """
+    dx = ex - hx
+    dy = ey - hy
+    na, nb = xp.abs(dx), xp.abs(dy)
+    sx, sy = xp.sign(dx), xp.sign(dy)
+    dist = na + nb
+    s = dist - t                       # hops remaining after t
+    # a = remaining |dx|, b = remaining |dy| at that point.
+    # westbound: all W first -> E-axis drains before N/S starts.
+    a_w = xp.maximum(s - nb, 0)
+    b_w = xp.minimum(s, nb)
+    # eastbound staircase: perfectly alternating while both axes live
+    # (the larger-remaining axis steps; from (a, b) with a == b the rule
+    # steps E), then straight.  While s >= 2*min(na, nb) the minority
+    # axis is still full on one side; below that the walk alternates, so
+    # remaining splits as evenly as possible with the *majority* axis
+    # holding the extra (ceil goes to b iff b leads, i.e. na < nb —
+    # equivalently a = s//2, b = ceil(s/2) never under-runs because the
+    # alternation starts from the majority side).
+    m2 = 2 * xp.minimum(na, nb)
+    a_hi = xp.where(na >= nb, s - nb, na)
+    b_hi = xp.where(na >= nb, nb, s - na)
+    a_e = xp.where(s >= m2, a_hi, s // 2)
+    b_e = xp.where(s >= m2, b_hi, (s + 1) // 2)
+    a = xp.where(dx < 0, a_w, a_e)
+    b = xp.where(dx < 0, b_w, b_e)
+    return hx + sx * (na - a), hy + sy * (nb - b)
+
+
+def make_lone_probe(n_pes: int):
+    """Build ``lone(sub_id, st) -> (N,) bool``: per-PE, whether its
+    sub-lane is in *lone flight* — exactly one buffered flit anywhere in
+    the sub-lane and no other event source (pending / software-wait
+    FIFOs empty, no stream engine on, every static AM injected).
+
+    This is the necessary precondition for the compressed advance; the
+    engine also evaluates it once per chunk (cheap: a handful of (N,)
+    segment reductions) to steer its two-speed chunk dispatch.
+    """
+    n = int(n_pes)
+    i32 = jnp.int32
+
+    def seg(x, sub_id):
+        return jax.ops.segment_sum(x, sub_id, num_segments=n)
+
+    def lone(sub_id, st: MachineState):
+        g_flits = seg(st.buf_n.sum(axis=1), sub_id)
+        g_pend = seg(st.pend_n, sub_id)
+        g_swq = seg(st.swq_n, sub_id)
+        g_strm = seg(st.stream_on.astype(i32), sub_id)
+        g_amq = seg((st.amq_head < st.amq_len).astype(i32), sub_id)
+        return ((g_flits == 1) & (g_pend == 0) & (g_swq == 0)
+                & (g_strm == 0) & (g_amq == 0))[sub_id]
+
+    return lone
+
+
+def make_fast_forward(cfg: MachineConfig, n_pes: int):
+    """Build ``ff(prog, mode, geom, sub_id, remaining, st, st2) -> st2'``.
+
+    Applied once per wall tick, after the plain transition ``st2`` of
+    pre-state ``st``: for every *eligible* sub-lane (see module
+    docstring) it rewrites ``st2``'s message buffers, ``cycle``, ``rr``
+    and ``st_hops`` to the state ``delta`` plain ticks would produce,
+    where ``delta = min(hops-to-arrival, remaining budget, cycles to
+    max_cycles)``.  Ineligible sub-lanes keep ``st2`` untouched, and
+    ``delta < 2`` falls back to the plain tick (identity by
+    definition), so the compressed engine is bit-identical to the plain
+    one everywhere.
+
+    Shapes are per-lane (this runs inside the engine's ``vmap``):
+    ``sub_id``/``remaining`` are (N,) int32, ``st``/``st2`` per-PE.
+    """
+    n = int(n_pes)
+    pe_ids = jnp.arange(n, dtype=jnp.int32)
+    i32 = jnp.int32
+    lone_probe = make_lone_probe(n)
+
+    def seg(x, sub_id):
+        return jax.ops.segment_sum(x, sub_id, num_segments=n)
+
+    def ff(prog_j, mode, geom, sub_id, remaining, st: MachineState,
+           st2: MachineState) -> MachineState:
+        if cfg.traced_geometry:
+            w, gh = geom[0], geom[1]
+        else:
+            w, gh = i32(cfg.width), i32(cfg.height)
+        if cfg.traced_modes:
+            opp_on = (mode & MODE_OPPORTUNISTIC) != 0
+        else:
+            opp_on = jnp.bool_(cfg.opportunistic)
+
+        # ---- lone-flight proof, per sub-lane (segment reductions) ----
+        lone = lone_probe(sub_id, st)
+
+        # ---- the flit: holder PE, message words, effective dest ------
+        # contiguity invariant: a non-empty FIFO's head is slot 0.
+        holder = st.buf_n > 0                          # (N, PORTS)
+        has = holder.any(axis=1)                       # (N,)
+        msg_pe = (st.buf[:, :, 0, :]
+                  * holder[..., None].astype(i32)).sum(axis=1)
+        msg = seg(msg_pe, sub_id)[sub_id]              # (N, MSG_F)
+        hold_pe = seg(jnp.where(has, pe_ids, 0), sub_id)[sub_id]
+        via = msg[:, F_VIA]
+        de = jnp.where(via >= 0, via, msg[:, F_DST0])  # current leg target
+        in_mesh = (de >= 0) & (de < w * gh)
+        dec = jnp.clip(de, 0)
+        ex, ey = dec % w, dec // w
+        hx, hy = hold_pe % w, hold_pe // w
+        na, nb = jnp.abs(ex - hx), jnp.abs(ey - hy)
+        sx, sy = jnp.sign(ex - hx), jnp.sign(ey - hy)
+        dist = na + nb
+
+        # ---- interception veto (mirror of sel_opportunistic's icand) -
+        # if an idle compute unit ANYWHERE along the path could grab the
+        # message, intermediate ticks are not inert — step plainly.
+        # (In lone flight any_alu_local is always False and every path
+        # PE is active, so the live predicate reduces to this.)
+        nxt_op = prog_j[jnp.clip(msg[:, F_PC], 0, prog_j.shape[0] - 1),
+                        C_OP]
+        icept = (is_alu_op(msg[:, F_OP]) & (msg[:, F_OP1C] == 1)
+                 & (msg[:, F_OP2C] == 1) & (nxt_op != OP_NOP)
+                 & (via < 0)) & opp_on
+
+        # ---- compressed advance ---------------------------------------
+        cap_left = i32(cfg.max_cycles) - st.cycle
+        delta = jnp.minimum(jnp.minimum(dist, remaining), cap_left)
+        eligible = lone & in_mesh & ~icept & (delta >= 2)
+
+        def pos_at(t):
+            return path_position(jnp, hx, hy, ex, ey, t)
+
+        # landing PE and its arrival input port (a flit leaving E lands
+        # on the neighbor's W port, etc.; y grows southward).
+        pxd, pyd = pos_at(delta)
+        pxp, pyp = pos_at(delta - 1)
+        stepx, stepy = pxd - pxp, pyd - pyp
+        aport = jnp.where(stepx > 0, P_W,
+                          jnp.where(stepx < 0, P_E,
+                                    jnp.where(stepy > 0, P_N, P_S)))
+        fp = pyd * w + pxd
+
+        # per-PE hop attribution: PE r sent the flit iff it is the k-th
+        # path position for some k < delta.  Robust inverse (exact under
+        # degenerate sx == 0 / sy == 0 too): recover k from coordinates,
+        # then verify the closed form round-trips.
+        rx, ry = pe_ids % w, pe_ids // w
+        a_r = na - sx * (rx - hx)
+        b_r = nb - sy * (ry - hy)
+        k_r = dist - (a_r + b_r)
+        k_c = jnp.clip(k_r, 0, dist)
+        pxk, pyk = pos_at(k_c)
+        on_path = (pxk == rx) & (pyk == ry) & (k_r == k_c)
+        hop_inc = (eligible & on_path & (k_r < delta)).astype(i32)
+
+        # ---- rewrite st2 for eligible sub-lanes ------------------------
+        # everything is derived from PRE-state st: the plain tick already
+        # moved the flit one hop inside st2, so slot-0 of every port of
+        # every PE in the sub-lane is overwritten (deeper slots are zero
+        # by the lone invariant).
+        msg_new = msg.at[:, F_HOPS].add(delta)
+        zero_m = eligible[:, None] & holder
+        put_m = ((eligible & (pe_ids == fp))[:, None]
+                 & (jnp.arange(PORTS)[None, :] == aport[:, None]))
+        buf0 = jnp.where(put_m[..., None], msg_new[:, None, :],
+                         jnp.where(zero_m[..., None], 0,
+                                   st.buf[:, :, 0, :]))
+        buf = st2.buf.at[:, :, 0, :].set(
+            jnp.where(eligible[:, None, None], buf0, st2.buf[:, :, 0, :]))
+        buf_n = jnp.where(eligible[:, None],
+                          st.buf_n - zero_m.astype(i32) + put_m.astype(i32),
+                          st2.buf_n)
+        return st2._replace(
+            buf=buf, buf_n=buf_n,
+            cycle=jnp.where(eligible, st.cycle + delta, st2.cycle),
+            rr=jnp.where(eligible, (st.rr + delta) % PORTS, st2.rr),
+            st_hops=jnp.where(eligible, st.st_hops + hop_inc,
+                              st2.st_hops))
+
+    return ff

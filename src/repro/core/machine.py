@@ -223,6 +223,18 @@ class MachineConfig:
     # traced_geometry=False bakes the mesh into the trace (one compile per
     # fabric size — the pre-traced golden path).
     traced_geometry: bool = True
+    # Event-compressed stepping (idle-cycle fast-forward): when a sub-lane's
+    # whole remaining activity is ONE in-flight message in uncontended
+    # flight, the engine advances that sub-lane by the message's remaining
+    # west-first hop distance in a single masked step instead of ticking
+    # every hop (:mod:`repro.core.fastforward`).  Cycle counters and every
+    # per-PE statistic are bit-identical to the plain tick loop by
+    # construction (the compressed advance replays exactly what the ticks
+    # would have done); whenever the bound is 1 the engine degrades to the
+    # plain behaviour.  fast_forward=False keeps the plain tick loop as the
+    # reference implementation (the static==traced golden pattern) — it is
+    # a *static* engine axis, so ff and plain key separate cache entries.
+    fast_forward: bool = True
 
     @property
     def n_pes(self) -> int:
@@ -407,6 +419,16 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
     sub-mesh lane packing a relocated lane must draw the same waypoint
     sequence it would solo, so the hash keys on the sub-mesh-local id.
 
+    ``halt`` is an optional (N,) bool mask of *budget-halted* PEs: rows
+    where it is True make NO state transition this tick — no execution,
+    no transit request, no stall/cycle/rr advance — so a budget-sliced
+    engine call can freeze a sub-lane mid-chunk (its co-tenants keep
+    stepping) and resume it later bit-identically.  ``halt=None`` (the
+    default) is byte-for-byte the historical unconditional tick.  Halting
+    is sound only per whole sub-lane (like idle freezing): west-first
+    rectangle isolation guarantees a halted sub-lane neither sends nor
+    receives across its boundary, so its transition is an exact no-op.
+
     ``n_pes`` is the PE-axis *array length* (>= the largest lane's
     width*height under traced geometry; must equal ``cfg.n_pes`` on the
     static path).
@@ -455,8 +477,12 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
 
     def cycle(prog_j: jnp.ndarray, mode: jnp.ndarray, geom: jnp.ndarray,
               st: MachineState,
-              local_ids: jnp.ndarray | None = None) -> MachineState:
+              local_ids: jnp.ndarray | None = None,
+              halt: jnp.ndarray | None = None) -> MachineState:
         sub_local = pe_ids if local_ids is None else local_ids
+        # act masks every state-changing site below; with halt=None the
+        # generated program is exactly the historical tick.
+        act = None if halt is None else ~halt
         if cfg.traced_geometry:
             # Traced mesh: coordinates, neighbor indices and the active-PE
             # mask are recomputed from the (width, height) vector each
@@ -525,6 +551,8 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
         at_dest = dest_eff == pe_ids[:, None]
         # clear a reached Valiant waypoint: routing then targets DST0.
         clear_via = head_v & (via >= 0) & at_dest
+        if act is not None:
+            clear_via = clear_via & act[:, None]
         real_dest = heads[:, :, F_DST0] == pe_ids[:, None]
         is_local = head_v & real_dest & (via < 0)
 
@@ -550,6 +578,9 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
             # anyway, so this mask is a defensive invariant, not a bit
             # change on active PEs.
             local_a = local_a & active[:, None, None]
+        if act is not None:
+            # budget-halted PEs execute nothing this tick
+            local_a = local_a & act[:, None, None]
         # STREAM tasks are *always* consumable: they park in the stream-task
         # wait queue (the TIA-style scheduler queue) until the decode unit is
         # free, so they never clog the network (deadlock avoidance, §3.4).
@@ -614,6 +645,8 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
             icand &= (~any_alu_local)[:, None]
             if active is not None:
                 icand &= active[:, None]
+            if act is not None:
+                icand &= act[:, None]
             return _pick_one(icand, st.rr + 1)
 
         sel_icept = pick_mode(opp_on, sel_opportunistic,
@@ -738,6 +771,8 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
         # Descriptor word (mem_val=base, meta0=count) at Op2 (address) — or
         # at Res when Op2 holds a value (PageRank: Op2 carries the degree).
         issue = (~st.stream_on) & (swq_n > 0)
+        if act is not None:
+            issue = issue & act
         task = jnp.take_along_axis(
             swq, swq_h[:, None, None].repeat(MSG_F, 2), 1)[:, 0, :]
         t_res = jnp.clip(task[:, F_RES], 0, cfg.mem_words - 1)
@@ -773,6 +808,8 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
         # -- streaming decode: emit one spawned AM per cycle (backpressure-
         # throttled, see STREAM_THROTTLE above) -------------------------------
         can_emit = stream_on & (pend_n < STREAM_THROTTLE)
+        if act is not None:
+            can_emit = can_emit & act
         e_addr = jnp.clip(stream_base, 0, cfg.mem_words - 1)
         e_val = jnp.take_along_axis(mem_val, e_addr[:, None], 1)[:, 0]
         e_meta = jnp.take_along_axis(
@@ -824,6 +861,11 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
         req = head_v & ~head_taken & (out_port < 4)
         # stalled LOCAL heads that could not execute this cycle:
         stall_local = head_v & (out_port == OUT_LOCAL) & ~head_taken
+        if act is not None:
+            # budget-halted PEs neither request output ports nor accrue
+            # stall statistics — their whole tick is frozen.
+            req = req & act[:, None]
+            stall_local = stall_local & act[:, None]
         grants = jnp.zeros((n, PORTS), dtype=jnp.bool_)
         for o in range(4):  # separable output-side arbitration (unrolled)
             cand_o = req & (out_port == o) & credit_ok[:, o][:, None]
@@ -885,6 +927,8 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
         inj_space = buf_n[:, P_INJ] < DEPTH
         if active is not None:
             inj_space = inj_space & active
+        if act is not None:
+            inj_space = inj_space & act
         have_dyn = pend_n > 0
         have_stat = st.amq_head < st.amq_len
         inj_dyn = inj_space & have_dyn
@@ -950,14 +994,18 @@ def _make_cycle(cfg: MachineConfig, n_pes: int | None = None):
         st_hops = st.st_hops + grants.sum(axis=1).astype(jnp.int32)
         st_inj = st.st_inj + do_inj.astype(jnp.int32)
 
+        # budget-halted PEs also freeze their cycle counter and round-robin
+        # pointer, preserving the rr ≡ cycle (mod PORTS) alignment that
+        # drives arbitration when a sliced run later resumes.
+        tick = jnp.int32(1) if act is None else act.astype(jnp.int32)
         return MachineState(
             buf=buf, buf_n=buf_n, amq=st.amq, amq_head=amq_head,
             amq_len=st.amq_len, pend=pend, pend_h=pend_h, pend_n=pend_n,
             mem_val=mem_val,
             mem_meta=st.mem_meta, stream_on=stream_on, stream_msg=stream_msg,
             stream_base=stream_base, stream_left=stream_left, swq=swq,
-            swq_h=swq_h, swq_n=swq_n, rr=(st.rr + 1) % PORTS,
-            cycle=st.cycle + 1,
+            swq_h=swq_h, swq_n=swq_n, rr=(st.rr + tick) % PORTS,
+            cycle=st.cycle + tick,
             st_busy=st_busy, st_exec=st_exec, st_enroute=st_enroute,
             st_stall=st_stall, st_hops=st_hops, st_inj=st_inj)
 
@@ -1062,9 +1110,10 @@ class RunResult:
 # arguments — the single underlying XLA executable.
 _ENGINE_CACHE: dict = {}
 
-# "run to completion" chunk budget for the engine's traced iteration bound
-# (np.int32 so every caller — run_many and the sliced sweep service — hits
-# the same int32 specialization of the jitted engine).
+# "run to completion" cycle budget for the engine's traced per-sub-lane
+# bound (np.int32 so every caller — run_many and the sliced sweep service
+# — hits the same int32 specialization of the jitted engine; max_cycles
+# always caps first).
 ENGINE_UNBOUNDED = np.int32(np.iinfo(np.int32).max)
 
 
@@ -1132,7 +1181,7 @@ def engine_cache_size() -> int:
 def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
                 n_devices: int = 1):
     """Batched runner ``engine(prog, modes, geoms, sub_ids, local_ids, st,
-    budget) -> (st, overflowed, idle)``.
+    budget) -> (st, overflowed, idle, ticks)``.
 
     ``prog`` is (B, P, CFG_F), ``modes`` a (B,) int32 per-lane mode bitmask
     (ignored by static-mode engines), ``geoms`` a (B, 2) int32 per-lane
@@ -1145,20 +1194,39 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
     terminating when every lane is idle (or capped, or a lane trips the
     pending-FIFO guard).
 
-    ``budget`` is a *traced* int32 bound on the number of chunk iterations
-    this call may run — the wave-resumable hook the sweep service slices
-    time with.  Chunk boundaries are identical either way (the inner scan
-    length is static), so running the engine twice with budget b then b'
-    is bit-identical to one call with b + b': the loop carry is the
-    machine state itself.  ``run_many`` passes :data:`ENGINE_UNBOUNDED`
-    (INT32_MAX) to run to completion; being traced, the bound costs no
+    ``budget`` is a *traced* int32 bound on the number of simulated
+    CYCLES each sub-lane may retire in this call — the wave-resumable
+    hook the sweep service slices time with.  The bound is denominated
+    in cycles (not loop iterations) so that fast-forwarded runs, which
+    retire many cycles per wall tick, account compressed cycles against
+    the same budget as plain runs: a sub-lane whose ``cycle`` counter
+    has advanced ``budget`` cycles past its value at call entry makes NO
+    further state transition this call (its tick is an exact no-op, see
+    :func:`_make_cycle`'s ``halt``).  Running the engine twice with
+    budget b then b' is therefore bit-identical to one call with b + b':
+    the loop carry is the machine state itself.  ``run_many`` passes
+    :data:`ENGINE_UNBOUNDED` (INT32_MAX) to run to completion (the
+    ``max_cycles`` cap fires first); being traced, the bound costs no
     recompile either way.  Freezing is per *sub-lane*: a sub-lane (the
     whole lane, when unpacked) that reaches idle stops advancing its PEs'
     cycle counters and stats while co-tenant sub-meshes keep stepping —
     so per-(sub-)lane metrics match a solo :func:`run` exactly.
 
+    With ``cfg.fast_forward`` (the default) each wall tick additionally
+    attempts an event-compressed advance (:mod:`repro.core.fastforward`):
+    a sub-lane whose only future event is a lone in-flight message
+    delivery teleports that message to its arrival position and bumps
+    cycle counters by the exact hop distance in one masked vector step.
+    The compression is bit-identity-by-construction — any sub-lane the
+    analysis can't prove quiet steps plainly — so cycles and per-PE
+    stats match the plain engine everywhere.
+
     ``idle`` is returned per-PE ((B, N) bool, uniform within a sub-lane):
-    callers read a sub-lane's completion off any of its PEs.
+    callers read a sub-lane's completion off any of its PEs.  ``ticks``
+    is a (B,) int32 of WALL loop ticks executed (chunk iterations x
+    chunk, uniform per device shard) — the telemetry hook behind
+    ``dead_step_fraction``: compressed runs retire more cycles than they
+    spend wall ticks.
 
     With ``n_devices > 1`` the whole engine body — chunked while-loop
     included — is wrapped in ``shard_map`` over a 1-D ``("lanes",)``
@@ -1176,50 +1244,102 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
     if eng is not None:
         return eng
     cyc = _make_cycle(cfg, n_max)
+    if cfg.fast_forward:
+        from repro.core.fastforward import make_fast_forward, make_lone_probe
+        ffwd = make_fast_forward(cfg, n_max)
+        lone_probe = jax.vmap(make_lone_probe(n_max))
+    else:
+        ffwd = None
+        lone_probe = None
 
-    def lane_step(prog, mode, geom, sub_id, local_id, st):
-        # Step unconditionally — on an idle sub-lane the transition is a
-        # natural no-op for every state array (idle is absorbing: nothing
-        # buffered, queued, streaming, or left to inject) — and freeze
-        # only the cycle counters and statistics of idle sub-lanes'
-        # PEs.  A per-lane lax.cond would lower to a select over EVERY
-        # leaf under vmap, copying the multi-MB queue arrays each cycle;
-        # masking the cheap observable leaves keeps per-cycle cost
-        # independent of queue capacities.
-        alive = (~group_idle(st, sub_id)) & (st.cycle < cfg.max_cycles)
-        st2 = cyc(prog, mode, geom, st, local_id)
+    def make_step(use_ff: bool):
+        def lane_step(prog, mode, geom, sub_id, local_id, c0, budget, st):
+            # Step unconditionally — on an idle sub-lane the transition
+            # is a natural no-op for every state array (idle is
+            # absorbing: nothing buffered, queued, streaming, or left to
+            # inject) — and freeze only the cycle counters and
+            # statistics of idle sub-lanes' PEs.  A per-lane lax.cond
+            # would lower to a select over EVERY leaf under vmap,
+            # copying the multi-MB queue arrays each cycle; masking the
+            # cheap observable leaves keeps per-cycle cost independent
+            # of queue capacities.
+            spent = st.cycle - c0
+            halt = spent >= budget
+            alive = (~group_idle(st, sub_id)) & (st.cycle < cfg.max_cycles) \
+                & ~halt
+            st2 = cyc(prog, mode, geom, st, local_id, halt=halt)
 
-        def keep(new, old):
-            return jnp.where(alive, new, old)
+            def keep(new, old):
+                return jnp.where(alive, new, old)
 
-        return st2._replace(
-            cycle=keep(st2.cycle, st.cycle),
-            st_busy=keep(st2.st_busy, st.st_busy),
-            st_exec=keep(st2.st_exec, st.st_exec),
-            st_enroute=keep(st2.st_enroute, st.st_enroute),
-            st_stall=jnp.where(alive[:, None], st2.st_stall, st.st_stall),
-            st_hops=keep(st2.st_hops, st.st_hops),
-            st_inj=keep(st2.st_inj, st.st_inj),
-        )
+            st2 = st2._replace(
+                # rr frozen too: an idle sub-lane is an exact state
+                # fixpoint, so a sliced run's final state matches the
+                # unbounded run's bit for bit (and rr stays congruent
+                # to cycle mod PORTS everywhere).
+                rr=keep(st2.rr, st.rr),
+                cycle=keep(st2.cycle, st.cycle),
+                st_busy=keep(st2.st_busy, st.st_busy),
+                st_exec=keep(st2.st_exec, st.st_exec),
+                st_enroute=keep(st2.st_enroute, st.st_enroute),
+                st_stall=jnp.where(alive[:, None], st2.st_stall,
+                                   st.st_stall),
+                st_hops=keep(st2.st_hops, st.st_hops),
+                st_inj=keep(st2.st_inj, st.st_inj),
+            )
+            if use_ff:
+                st2 = ffwd(prog, mode, geom, sub_id, budget - spent,
+                           st, st2)
+            return st2
 
-    step = jax.vmap(lane_step, in_axes=(0, 0, 0, 0, 0, 0))
+        return jax.vmap(lane_step, in_axes=(0, 0, 0, 0, 0, 0, None, 0))
+
+    step = make_step(False)
+    step_ff = make_step(True) if ffwd is not None else None
     batch_idle = jax.vmap(lambda sub_id, s: group_idle(s, sub_id))
 
     def engine_fn(prog, modes, geoms, sub_ids, local_ids, st, budget):
+        cycle0 = st.cycle
+
         def cond(carry):
             s, over, it = carry
             # a lane is live while any of its PEs still advances: its
-            # sub-lane has work left and its cycle counter is below the
-            # cap.  (A capped-but-busy sub-lane no longer keeps the lane
-            # live — its co-tenants' own counters reach the cap too.)
-            live = (~batch_idle(sub_ids, s)) & (s.cycle < cfg.max_cycles)
-            return live.any() & ~over.any() & (it < budget)
+            # sub-lane has work left, its cycle counter is below the
+            # cap, and it has budget left this call.  (A capped-but-busy
+            # sub-lane no longer keeps the lane live — its co-tenants'
+            # own counters reach the cap too.)
+            live = (~batch_idle(sub_ids, s)) & (s.cycle < cfg.max_cycles) \
+                & (s.cycle - cycle0 < budget)
+            return live.any() & ~over.any()
+
+        def chunk_scan(stp, s):
+            def sub(s, _):
+                return stp(prog, modes, geoms, sub_ids, local_ids,
+                           cycle0, budget, s), ()
+            return jax.lax.scan(sub, s, None, length=chunk)[0]
 
         def body(carry):
             s, over, it = carry
-            def sub(s, _):
-                return step(prog, modes, geoms, sub_ids, local_ids, s), ()
-            s, _ = jax.lax.scan(sub, s, None, length=chunk)
+            if step_ff is None:
+                s = chunk_scan(step, s)
+            else:
+                # two-speed chunk dispatch: the fast-forward tick costs
+                # extra HLOs per cycle (segment reductions + the
+                # teleport rewrite), which is pure overhead while the
+                # fabric is congested.  A batch-level lax.cond — a REAL
+                # branch, unlike per-lane conds under vmap — picks the
+                # compressed chunk only when some live sub-lane is
+                # currently in lone flight (a cheap probe, amortized
+                # over the whole chunk).  The probe steers performance
+                # only: both chunk bodies are bit-identical by
+                # construction, so a mid-chunk misprediction costs
+                # ticks, never correctness.
+                lone = (lone_probe(sub_ids, s)
+                        & (s.cycle < cfg.max_cycles)
+                        & (s.cycle - cycle0 < budget))
+                s = jax.lax.cond(lone.any(),
+                                 functools.partial(chunk_scan, step_ff),
+                                 functools.partial(chunk_scan, step), s)
             # pending-FIFO high-water check at chunk granularity (the
             # consumption-guarantee invariant, see PEND_CAP above).  PEs
             # already frozen at max_cycles are exempt: they keep being
@@ -1231,9 +1351,10 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
             return s, over, it + 1
 
         over0 = jnp.zeros((st.cycle.shape[0],), jnp.bool_)
-        st, over, _ = jax.lax.while_loop(cond, body,
-                                         (st, over0, jnp.int32(0)))
-        return st, over, batch_idle(sub_ids, st)
+        st, over, it = jax.lax.while_loop(cond, body,
+                                          (st, over0, jnp.int32(0)))
+        ticks = jnp.full((st.cycle.shape[0],), it * chunk, jnp.int32)
+        return st, over, batch_idle(sub_ids, st), ticks
 
     if n_devices > 1:
         from jax.sharding import PartitionSpec
@@ -1252,7 +1373,7 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
         # earlier, exactly like the unsharded engine).
         engine_fn = shard_map_unchecked(
             engine_fn, mesh, in_specs=(spec,) * 6 + (PartitionSpec(),),
-            out_specs=(spec, spec, spec))
+            out_specs=(spec, spec, spec, spec))
     engine = jax.jit(engine_fn, donate_argnums=5)
 
     _ENGINE_CACHE[key] = engine
@@ -1303,7 +1424,8 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
                    chunk: int = 512, pack: bool = False,
                    super_geom=None, pack_stats: dict | None = None,
                    shard: bool = False, cycle_hints=None,
-                   shard_stats: dict | None = None
+                   shard_stats: dict | None = None,
+                   telemetry: dict | None = None
                    ) -> list[RunResult]:
     """Simulate B workloads in a single batched on-device run.
 
@@ -1367,6 +1489,14 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
       shard_stats: optional dict that ``shard=True`` fills with
         ``n_devices`` / ``lanes_per_device`` / ``n_pad_lanes`` and the
         per-device lane ``plan``.
+      telemetry: optional dict accumulating engine-efficiency counters
+        across every engine call this run makes (one per wave under
+        ``pack=True``): ``stepped_pe_ticks`` (wall PE-steps executed),
+        ``plain_pe_ticks`` (PE-steps the plain tick-per-cycle engine
+        would execute for the same final cycle counts) and
+        ``engine_calls``.  ``dead_step_fraction`` is
+        ``1 - stepped/plain`` — exactly 0 for ``fast_forward=False``
+        engines by construction.
 
     Returns:
       One :class:`RunResult` per lane, in input order — metrics are exactly
@@ -1450,7 +1580,8 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
             try:
                 wave_res = _run_many_impl(cfg, wb, chunk=chunk, shard=shard,
                                           cycle_hints=hints_w,
-                                          shard_stats=ws)
+                                          shard_stats=ws,
+                                          telemetry=telemetry)
             except RuntimeError as e:
                 supers = getattr(e, "lanes", None)
                 if supers is None:
@@ -1612,12 +1743,34 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
         lanes(workloads.mem_meta))
     engine = _get_engine(cfg, chunk, n_max,
                          n_devices=n_dev if order is not None else 1)
-    st, over, idle = engine(
+    st, over, idle, ticks = engine(
         lanes(workloads.prog), lanes(lane_modes),
         lanes(lane_geoms, pad_row=np.array([1, 1], np.int32)),
         lanes(sub_ids),
         lanes(local_ids, pad_row=np.arange(n_max, dtype=np.int32)), st,
         ENGINE_UNBOUNDED)
+    if telemetry is not None:
+        # dead-step accounting (device order; ticks is uniform per device
+        # shard): wall PE-steps actually executed vs what the plain
+        # tick-per-cycle engine would have executed to reach the same
+        # final cycle counts (rounded up to chunk granularity, which is
+        # exactly what the plain engine runs).
+        t_np = np.asarray(ticks)
+        cyc_np = np.asarray(st.cycle)
+        bsz = t_np.shape[0]
+        per_dev = bsz // n_dev if order is not None else bsz
+        groups = [list(range(g, g + per_dev)) for g in range(0, bsz, per_dev)]
+        stepped = plain = 0
+        for g in groups:
+            it_ticks = int(t_np[g[0]])
+            want = int(cyc_np[g].max())
+            stepped += it_ticks * len(g) * n_max
+            plain += -(-want // chunk) * chunk * len(g) * n_max
+        telemetry["stepped_pe_ticks"] = (
+            telemetry.get("stepped_pe_ticks", 0) + stepped)
+        telemetry["plain_pe_ticks"] = (
+            telemetry.get("plain_pe_ticks", 0) + plain)
+        telemetry["engine_calls"] = telemetry.get("engine_calls", 0) + 1
     over = np.asarray(over)
     idle = np.asarray(idle)                      # (B, N) per-PE group idle
     host = _host_stats(st)

@@ -147,17 +147,49 @@ class ShardStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class EngineTelemetry:
+    """Engine-efficiency counters for the sweep's engine calls.
+
+    ``stepped_pe_ticks`` counts wall PE-steps the engine actually
+    executed; ``plain_pe_ticks`` what the plain tick-per-cycle engine
+    would have executed to reach the same final cycle counters (chunk
+    granularity — exactly what ``fast_forward=False`` runs).  Their gap
+    is the event-compression win: :attr:`dead_step_fraction` is the
+    fraction of plain PE-steps the fast-forward engine skipped (0.0 by
+    construction on plain engines, and on workloads with no compressible
+    lone-flight stretches).
+    """
+    stepped_pe_ticks: int
+    plain_pe_ticks: int
+    engine_calls: int
+
+    @property
+    def dead_step_fraction(self) -> float:
+        if self.plain_pe_ticks <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self.stepped_pe_ticks / self.plain_pe_ticks)
+
+    def to_json(self) -> dict:
+        return dict(stepped_pe_ticks=int(self.stepped_pe_ticks),
+                    plain_pe_ticks=int(self.plain_pe_ticks),
+                    engine_calls=int(self.engine_calls),
+                    dead_step_fraction=float(self.dead_step_fraction))
+
+
+@dataclasses.dataclass(frozen=True)
 class SweepReport:
     """Everything a sweep produced: per-lane results + the schedules.
 
     Behaves like the legacy result list (``len`` / index / iterate all
     hit ``lanes``), so migrating a call site is usually just swapping
     the call.  ``pack`` / ``shard`` are None when the corresponding
-    switch was off.
+    switch was off.  ``telemetry`` carries the engine's dead-step
+    accounting (always present on the ``sweep()`` path).
     """
     lanes: tuple                      # tuple[RunResult, ...] in input order
     pack: PackStats | None = None
     shard: ShardStats | None = None
+    telemetry: EngineTelemetry | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "lanes", tuple(self.lanes))
@@ -184,6 +216,8 @@ class SweepReport:
             lanes=[r.to_json() for r in self.lanes],
             pack=None if self.pack is None else self.pack.to_json(),
             shard=None if self.shard is None else self.shard.to_json(),
+            telemetry=(None if self.telemetry is None
+                       else self.telemetry.to_json()),
         )
 
 
@@ -213,6 +247,7 @@ def sweep(cfg: MachineConfig, request: SweepRequest) -> SweepReport:
         validate_request(wls, modes=request.modes,
                          strict=(request.validate == "strict"),
                          stream_wait_cap=cfg.stream_wait_cap)
+    tm: dict = {}
     results = machine._run_many_impl(
         cfg, wls,
         modes=None if request.modes is None else list(request.modes),
@@ -222,7 +257,7 @@ def sweep(cfg: MachineConfig, request: SweepRequest) -> SweepReport:
         shard=request.shard,
         cycle_hints=(None if request.cycle_hints is None
                      else list(request.cycle_hints)),
-        shard_stats=ss)
+        shard_stats=ss, telemetry=tm)
     pack = None if ps is None else PackStats(
         n_waves=ps["n_waves"], n_super_lanes=ps["n_super_lanes"],
         packing_efficiency=ps["packing_efficiency"],
@@ -231,4 +266,9 @@ def sweep(cfg: MachineConfig, request: SweepRequest) -> SweepReport:
     shard = None if ss is None else ShardStats(
         n_devices=ss["n_devices"], lanes_per_device=ss["lanes_per_device"],
         n_pad_lanes=ss["n_pad_lanes"], plan=tuple(ss.get("plan", ())))
-    return SweepReport(lanes=tuple(results), pack=pack, shard=shard)
+    telemetry = EngineTelemetry(
+        stepped_pe_ticks=tm.get("stepped_pe_ticks", 0),
+        plain_pe_ticks=tm.get("plain_pe_ticks", 0),
+        engine_calls=tm.get("engine_calls", 0))
+    return SweepReport(lanes=tuple(results), pack=pack, shard=shard,
+                       telemetry=telemetry)

@@ -43,10 +43,9 @@ import numpy as np
 from repro.core import machine
 from repro.core.am import C_NEXT_PC
 from repro.core.batch import RectPool, SubLane, _rebase_into_super, bucket
-from repro.core.machine import (ENGINE_UNBOUNDED, MachineConfig,
-                                MachineState, RunResult, _get_engine,
-                                _host_stats, _pe_slice_result, init_state,
-                                mode_code, resolve_mode)
+from repro.core.machine import (MachineConfig, MachineState, RunResult,
+                                _get_engine, _host_stats, _pe_slice_result,
+                                init_state, mode_code, resolve_mode)
 
 
 class ServiceError(RuntimeError):
@@ -145,7 +144,7 @@ class SweepService:
         self._seq = 0
         self._built = False
         self.stats = dict(n_installs=0, n_refills=0, n_retired=0,
-                          n_slices=0, occupancy_sum=0.0)
+                          n_slices=0, occupancy_sum=0.0, engine_ticks=0)
 
         if template is not None:
             self._build_arena(list(template))
@@ -421,12 +420,18 @@ class SweepService:
         self._admit()
         if not self._residents:
             return
-        st, over, idle = self._engine(
+        # the engine budget is denominated in CYCLES (not chunk
+        # iterations): a fast-forwarded slice retires compressed cycles
+        # against the same bound a plain slice would, so slicing at b
+        # then b' stays bit-identical to one b + b' call either way.
+        st, over, idle, ticks = self._engine(
             self._prog, self._modes, self._geoms, self._sub_ids,
-            self._local_ids, self._st, np.int32(self._slice_chunks))
+            self._local_ids, self._st,
+            np.int32(self._slice_chunks * self._chunk))
         self._st = st
         over = np.asarray(over)
         self.stats["n_slices"] += 1
+        self.stats["engine_ticks"] += int(np.asarray(ticks).max(initial=0))
         b, n = self._sub_ids.shape
         self.stats["occupancy_sum"] += (
             sum(p.used_area() for p in self._pools) / float(b * n))

@@ -1,0 +1,316 @@
+"""Fast-forward equivalence golden suite.
+
+The event-compressed engine (``cfg.fast_forward``, the default — see
+:mod:`repro.core.fastforward`) must be BIT-identical to the plain
+tick-per-cycle engine: same final cycle counters, same per-PE busy and
+per-port stall statistics, same memory image, same overflow flags.  The
+claim is by construction (compression only fires on sub-lanes proven
+quiet), and this suite pins it empirically:
+
+  * solo workload x mode x size smoke grid, ff vs plain;
+  * the same grid packed into shared super-lanes, and (multidevice)
+    sharded over the forced host devices;
+  * engine-level budget slicing: running budgets b then b' equals one
+    b + b' call, on BOTH engines (the cycles-not-iterations budget fix);
+  * a scrambled-chain workload where compression actually engages
+    (``dead_step_fraction > 0``), including a chunk=1 single-tick
+    replay — the finest-grained cross-check of every compressed advance;
+  * the closed-form path (``fastforward.path_position``) against a
+    pure-Python reference of the router's west-first + staircase rule,
+    property-tested (hypothesis when available, exhaustive fallback)
+    and bounded by ``analysis.cost.fast_forward_bound``.
+
+Engine-cache bookkeeping rides along: the whole ff grid (solo + packed)
+compiles ONE engine; the plain grid adds exactly one more.
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+from repro.analysis import fast_forward_bound
+from repro.core import compiler, machine
+from repro.core.fastforward import path_position
+from repro.core.machine import FABRIC_MODES, MachineConfig
+from repro.core.sweep import SweepRequest, sweep
+
+RNG = np.random.default_rng(29)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - hypothesis is a dev dep
+    HAVE_HYPOTHESIS = False
+
+
+def _cfg(w=4, h=4, **kw):
+    kw.setdefault("mem_words", 1024)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(width=w, height=h, **kw)
+
+
+def _sig(r):
+    """Every observable of a RunResult, hashable for == comparison."""
+    return (r.cycles, r.executed, r.enroute, r.hops, r.injected,
+            r.completed,
+            tuple(np.asarray(r.per_pe_busy).tolist()),
+            tuple(np.asarray(r.stall_per_port).ravel().tolist()),
+            tuple(np.asarray(r.mem_val).tolist()))
+
+
+def _assert_lanes_equal(ffs, plains, label):
+    assert len(ffs) == len(plains)
+    for i, (f, p) in enumerate(zip(ffs, plains)):
+        assert _sig(f) == _sig(p), f"{label} lane {i}"
+
+
+def chain_workload(cfg, n_nodes, seed=3):
+    """Pointer-chase BFS over a SCRAMBLED chain: node placement is a
+    random permutation, so every successor hop is a long lone flight —
+    the workload class event compression exists for."""
+    from benchmarks.workloads import pointer_chase_graph
+    rowptr, col, src = pointer_chase_graph(n_nodes, seed=seed)
+    return compiler.build_bfs(rowptr, col, src, cfg)
+
+
+# ----------------------------------------------------------------------
+# the golden smoke grid: workload x mode x size
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def grid():
+    """9 lanes: {spmv, bfs, sddmm} x {2x2, 3x3, 4x4}, modes cycling
+    through all three fabric modes."""
+    from benchmarks.workloads import small_world_graph
+    a = compiler.random_sparse(8, 8, 0.4, RNG)
+    x = RNG.integers(-4, 5, size=(8,))
+    ad = RNG.integers(-3, 4, size=(6, 4))
+    bd = RNG.integers(-3, 4, size=(4, 6))
+    mask = (RNG.random((6, 6)) < 0.4).astype(np.int64)
+    rp, col = small_world_graph(12, 4, 2)
+    lanes, modes = [], []
+    all_modes = list(FABRIC_MODES)
+    for n in (2, 3, 4):
+        cfg = _cfg(n, n)
+        for j, wl in enumerate((compiler.build_spmv(a, x, cfg),
+                                compiler.build_bfs(rp, col, 0, cfg),
+                                compiler.build_sddmm(ad, bd, mask, cfg))):
+            lanes.append(wl)
+            modes.append(all_modes[(n + j) % len(all_modes)])
+    return lanes, modes
+
+
+def test_fast_forward_matches_plain_solo_grid(grid):
+    lanes, modes = grid
+    machine.clear_engine_cache()
+    ff = machine.run_many(_cfg(), lanes, modes=modes)
+    assert machine.engine_cache_size() == 1
+    plain = machine.run_many(_cfg(fast_forward=False), lanes, modes=modes)
+    assert machine.engine_cache_size() == 2, \
+        "fast_forward keys its own engine cache entry"
+    _assert_lanes_equal(ff, plain, "solo")
+    assert all(r.completed for r in ff)
+
+
+def test_fast_forward_matches_plain_packed(grid):
+    lanes, modes = grid
+    machine.clear_engine_cache()
+    req = functools.partial(SweepRequest, workloads=lanes, modes=modes,
+                            pack=True, super_geom=(4, 4))
+    ff = sweep(_cfg(), req())
+    assert machine.engine_cache_size() == 1, \
+        "packed waves must reuse the solo grid's engine shape"
+    plain = sweep(_cfg(fast_forward=False), req())
+    _assert_lanes_equal(list(ff), list(plain), "packed")
+    # packed == solo too (the sub-mesh isolation property, under ff)
+    solo = machine.run_many(_cfg(), lanes, modes=modes)
+    _assert_lanes_equal(list(ff), solo, "packed-vs-solo")
+    # the plain engine's telemetry is exactly zero compression
+    assert plain.telemetry is not None
+    assert plain.telemetry.dead_step_fraction == 0.0
+
+
+@pytest.mark.multidevice
+def test_fast_forward_matches_plain_sharded(grid, n_devices):
+    lanes, modes = grid
+    ff = sweep(_cfg(), SweepRequest(workloads=lanes, modes=modes,
+                                    shard=True))
+    plain = sweep(_cfg(fast_forward=False),
+                  SweepRequest(workloads=lanes, modes=modes, shard=True))
+    assert ff.shard is not None and ff.shard.n_devices > 1
+    _assert_lanes_equal(list(ff), list(plain), "sharded")
+
+
+# ----------------------------------------------------------------------
+# compression actually engaging: the scrambled chain
+# ----------------------------------------------------------------------
+def test_chain_compresses_and_stays_bit_identical():
+    cfg = _cfg(8, 8, mem_words=2048)
+    wl = chain_workload(cfg, 64)
+    # chunk=64: telemetry is chunk-granular, and the 64-node chain
+    # retires in ~470 plain cycles — a 512-cycle chunk would hide the
+    # compression entirely.
+    ff = sweep(cfg, SweepRequest(workloads=[wl], chunk=64))
+    plain = sweep(dataclasses.replace(cfg, fast_forward=False),
+                  SweepRequest(workloads=[wl], chunk=64))
+    _assert_lanes_equal(list(ff), list(plain), "chain")
+    assert ff[0].completed
+    assert ff.telemetry is not None
+    # the point of the workload: most plain PE-steps are dead transit
+    assert ff.telemetry.dead_step_fraction > 0.2, ff.telemetry.to_json()
+    assert ff.telemetry.stepped_pe_ticks < ff.telemetry.plain_pe_ticks
+
+
+def test_chunk1_single_tick_replay_matches():
+    """chunk=1 makes the two-speed dispatch re-decide EVERY wall tick,
+    so every individual compressed advance is replayed against a plain
+    single-tick engine — the finest-grained equivalence cross-check."""
+    cfg = _cfg(3, 3, max_cycles=20_000)
+    lanes = [chain_workload(cfg, 9, seed=s) for s in (3, 7)]
+    ff = machine.run_many(cfg, lanes, chunk=1)
+    plain = machine.run_many(dataclasses.replace(cfg, fast_forward=False),
+                             lanes, chunk=1)
+    _assert_lanes_equal(ff, plain, "chunk1")
+    assert all(r.completed for r in ff)
+
+
+# ----------------------------------------------------------------------
+# budget slicing: cycles, not loop iterations
+# ----------------------------------------------------------------------
+def _engine_args(cfg, wl, n):
+    import jax
+    prog = np.asarray(wl.prog, np.int32)[None]
+    modes = np.array([machine.resolve_mode("nexus")], np.int32)
+    geoms = np.array([[cfg.width, cfg.height]], np.int32)
+    sub_ids = np.zeros((1, n), np.int32)
+    local_ids = np.arange(n, dtype=np.int32)[None]
+    st = jax.tree_util.tree_map(
+        lambda x: np.asarray(x)[None],
+        machine.init_state(cfg, np.asarray(wl.static_ams),
+                           np.asarray(wl.amq_len), np.asarray(wl.mem_val),
+                           np.asarray(wl.mem_meta)))
+    return prog, modes, geoms, sub_ids, local_ids, st
+
+
+@pytest.mark.parametrize("fast_forward", [True, False],
+                         ids=["ff", "plain"])
+def test_budget_b_then_bprime_equals_one_call(fast_forward):
+    """engine(st, b) then engine(., b') == engine(st, b+b') — the budget
+    is denominated in simulated CYCLES on both engines, so a compressed
+    advance charges every cycle it retires against the slice budget
+    (the SweepService slicing bugfix, pinned at the engine level)."""
+    import jax
+    cfg = _cfg(8, 8, mem_words=2048, fast_forward=fast_forward)
+    wl = chain_workload(cfg, 64)
+    n = cfg.width * cfg.height
+    eng = machine._get_engine(cfg, chunk=16, n_max=n)
+    base = _engine_args(cfg, wl, n)
+
+    # b1 deliberately NOT chunk-aligned, and small enough that the chain
+    # is mid-flight (mid-compression, on the ff engine) at the cut.
+    b1, b2 = np.int32(37), np.int32(200)
+    st_a, _, _, _ = eng(*base[:5], base[5], b1)
+    cyc_a = int(np.asarray(st_a.cycle).max())
+    assert cyc_a <= 37, "a slice never retires more cycles than its budget"
+    st_a, over_a, idle_a, _ = eng(*base[:5], st_a, b2)
+
+    base_b = _engine_args(cfg, wl, n)     # st is donated: rebuild fresh
+    st_b, over_b, idle_b, _ = eng(*base_b[:5], base_b[5], b1 + b2)
+
+    for la, lb in zip(jax.tree_util.tree_leaves(st_a),
+                      jax.tree_util.tree_leaves(st_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(over_a), np.asarray(over_b))
+    np.testing.assert_array_equal(np.asarray(idle_a), np.asarray(idle_b))
+
+    # and slicing all the way to idle equals the unbounded run
+    base_c = _engine_args(cfg, wl, n)
+    st_c = base_c[5]
+    for _ in range(200):
+        st_c, _, idle_c, _ = eng(*base_c[:5], st_c, np.int32(97))
+        if bool(np.asarray(idle_c).all()):
+            break
+    assert bool(np.asarray(idle_c).all()), "sliced run never went idle"
+    base_d = _engine_args(cfg, wl, n)
+    st_d, _, _, _ = eng(*base_d[:5], base_d[5], machine.ENGINE_UNBOUNDED)
+    for lc, ld in zip(jax.tree_util.tree_leaves(st_c),
+                      jax.tree_util.tree_leaves(st_d)):
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(ld))
+
+
+# ----------------------------------------------------------------------
+# the closed-form path vs the routing rule (property test)
+# ----------------------------------------------------------------------
+def _route_reference(hx, hy, ex, ey):
+    """Pure-Python replay of the router's rule under full credit:
+    west-first (all W hops before any N/S), eastbound the adaptive
+    tie-break degenerates to 'step E iff remaining |dx| >= |dy|'."""
+    path = [(hx, hy)]
+    x, y = hx, hy
+    while (x, y) != (ex, ey):
+        dx, dy = ex - x, ey - y
+        if dx < 0:
+            x -= 1
+        elif dx > 0 and abs(dx) >= abs(dy):
+            x += 1
+        elif dy != 0:
+            y += 1 if dy > 0 else -1
+        else:
+            x += 1
+        path.append((x, y))
+    return path
+
+
+def _check_path(w, h, hx, hy, ex, ey):
+    ref = _route_reference(hx, hy, ex, ey)
+    dist = abs(ex - hx) + abs(ey - hy)
+    assert len(ref) == dist + 1, "reference route must be minimal"
+    assert dist <= fast_forward_bound(w, h)
+    for t, (rx, ry) in enumerate(ref):
+        px, py = path_position(np, np.int32(hx), np.int32(hy),
+                               np.int32(ex), np.int32(ey), np.int32(t))
+        assert (int(px), int(py)) == (rx, ry), \
+            f"({hx},{hy})->({ex},{ey}) t={t}: closed form ({px},{py}) " \
+            f"!= reference ({rx},{ry})"
+        # every step is a single hop inside the bounding box
+        assert min(hx, ex) <= rx <= max(hx, ex)
+        assert min(hy, ey) <= ry <= max(hy, ey)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=300, deadline=None)
+    @given(st.integers(1, 9), st.integers(1, 9), st.data())
+    def test_path_position_matches_router_reference(w, h, data):
+        hx = data.draw(st.integers(0, w - 1))
+        ex = data.draw(st.integers(0, w - 1))
+        hy = data.draw(st.integers(0, h - 1))
+        ey = data.draw(st.integers(0, h - 1))
+        _check_path(w, h, hx, hy, ex, ey)
+else:                       # pragma: no cover - seeded exhaustive fallback
+    def test_path_position_matches_router_reference():
+        for (w, h) in ((8, 8), (5, 3), (1, 7), (6, 1)):
+            for src in range(w * h):
+                for dst in range(w * h):
+                    _check_path(w, h, src % w, src // w, dst % w, dst // w)
+
+
+def test_path_position_endpoints_and_monotonic_progress():
+    """t=0 is the source, t=dist the destination, and each tick moves
+    exactly one hop closer — the facts the teleport's delta >= 1
+    guarantee (and hop attribution) rest on."""
+    rng = np.random.default_rng(11)
+    for _ in range(200):
+        w, h = int(rng.integers(1, 9)), int(rng.integers(1, 9))
+        hx, ex = rng.integers(0, w, size=2)
+        hy, ey = rng.integers(0, h, size=2)
+        dist = abs(int(ex - hx)) + abs(int(ey - hy))
+        prev = None
+        for t in range(dist + 1):
+            px, py = path_position(np, hx, hy, ex, ey, np.int32(t))
+            left = abs(int(ex - px)) + abs(int(ey - py))
+            assert left == dist - t
+            if prev is not None:
+                assert abs(int(px - prev[0])) + abs(int(py - prev[1])) == 1
+            prev = (px, py)
+        assert (int(px), int(py)) == (int(ex), int(ey))

@@ -214,6 +214,24 @@ def test_service_rejects_untraced_config():
         SweepService(_cfg(traced_geometry=False))
 
 
+def test_service_plain_engine_matches_fast_forward(traffic, reference):
+    """The sliced service on the PLAIN (fast_forward=False) engine
+    reproduces the one-shot fast-forward reference bit for bit — pinning
+    both halves of the budget bugfix: budgets are denominated in cycles
+    on either engine, and compression never changes what a slice
+    retires."""
+    lanes, modes = traffic
+    machine.clear_engine_cache()
+    with SweepService(_cfg(fast_forward=False), template=lanes, n_supers=2,
+                      slice_chunks=1) as svc:
+        futs = [svc.submit(wl, mode=m) for wl, m in zip(lanes, modes)]
+        svc.drain(timeout=600)
+        assert svc.stats["engine_ticks"] > 0
+        for i, f in enumerate(futs):
+            _assert_same(f.result(), reference[i], f"plain-engine lane {i}")
+    assert machine.engine_cache_size() == 1
+
+
 @pytest.mark.multidevice
 def test_service_sharded_soak(traffic, reference, n_devices):
     """The same soak with the super-lane axis sharded over the forced
