@@ -1,0 +1,175 @@
+"""Nightly chaos soak: seeded faults against the sweep service, gated.
+
+Drives the standard oversubscribed fig17-smoke traffic through
+:func:`repro.serve.chaos.run_soak` with a seeded fault schedule
+(transient engine faults retried with backoff + a scheduler
+kill/restart absorbed by drain), one deadline-exceeded lane, duplicate
+submissions, and per-slice checkpoints — then restores from a mid-soak
+checkpoint and replays the in-flight tail.  Everything is gated on
+bit-identity:
+
+  * every surviving lane's RunResult == the one-shot ``run_many`` of
+    the same lanes (metrics AND memory image);
+  * the deadline lane fails ONLY its own future, frozen exactly at the
+    deadline, with per-PE diagnostics + telemetry attached;
+  * the restored service's outcomes == the original soak's, bit for bit.
+
+Any violation prints the failure list and exits nonzero — this is the
+CI nightly ``chaos-soak`` step.  Run it locally with::
+
+    PYTHONPATH=src python -m benchmarks.chaos_soak --seed 5
+
+(Any seed must pass; CI varies the seed by date so the schedule space
+actually gets explored.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+from repro.core import machine
+
+
+def run(seed: int, *, copies: int = 2, n_transients: int = 2,
+        n_kills: int = 1, chunk: int = 8, timeout: float = 900.0,
+        verbose: bool = True) -> dict:
+    """One gated soak + restore round; returns the result record
+    (``record["failures"]`` empty iff the gate passes)."""
+    from benchmarks.serve_bench import fig17_traffic
+    from repro.checkpoint.store import list_steps
+    from repro.serve import DeadlineError, FaultSchedule, SweepService
+    from repro.serve.chaos import results_bit_identical, run_soak
+
+    cfg, lanes = fig17_traffic(copies)
+    reference = machine.run_many(cfg, lanes)
+    dl_lane = max(range(len(reference)), key=lambda i: reference[i].cycles)
+    deadline = max(1, reference[dl_lane].cycles // 2)
+
+    failures: list[str] = []
+    root = tempfile.mkdtemp(prefix="chaos-soak-")
+    schedule = FaultSchedule.seeded(seed, n_transients=n_transients,
+                                    n_kills=n_kills,
+                                    horizon=4 * (n_transients + n_kills))
+    t0 = time.perf_counter()
+    report, svc = run_soak(
+        cfg, lanes, seed=seed, schedule=schedule,
+        deadline_lane=dl_lane, deadline_cycles=deadline,
+        duplicates=max(1, len(lanes) // 4), timeout=timeout,
+        service_kwargs=dict(template=lanes, n_supers=2, chunk=chunk,
+                            slice_chunks=1, checkpoint_root=root,
+                            checkpoint_every=2, checkpoint_keep=10_000))
+    svc.shutdown()
+    soak_s = time.perf_counter() - t0
+
+    fired_kinds = sorted({k for _, _, k in report.fired})
+    if "transient" not in fired_kinds or "kill" not in fired_kinds:
+        failures.append(f"schedule under-fired: {report.fired} (raise "
+                        "--copies or lower --chunk so slices outnumber "
+                        "the horizon)")
+    if report.stats["n_restarts"] < n_kills:
+        failures.append(f"restarts {report.stats['n_restarts']} < "
+                        f"injected kills {n_kills}")
+
+    expect_survivors = set(range(len(lanes))) - {dl_lane}
+    if set(report.survivors) != expect_survivors:
+        failures.append(f"survivor set {sorted(report.survivors)} != "
+                        f"{sorted(expect_survivors)}")
+    for i, r in report.survivors.items():
+        if not results_bit_identical(r, reference[i]):
+            failures.append(f"lane {i} drifted from one-shot run_many")
+    for i, r in report.duplicate_results.items():
+        if not results_bit_identical(r, reference[i]):
+            failures.append(f"duplicate of lane {i} drifted")
+
+    err = report.results[dl_lane]
+    if not isinstance(err, DeadlineError):
+        failures.append(f"deadline lane {dl_lane} got "
+                        f"{type(err).__name__}, expected DeadlineError")
+    else:
+        if err.result is None or err.result.cycles != deadline:
+            failures.append(f"deadline lane froze at "
+                            f"{err.result and err.result.cycles}, "
+                            f"expected exactly {deadline}")
+        if err.telemetry is None:
+            failures.append("deadline error carries no telemetry")
+
+    # restore from a mid-soak checkpoint: the in-flight tail must land
+    # on the same bits
+    steps = list_steps(root)
+    restored_lanes = 0
+    if not steps:
+        failures.append("soak wrote no checkpoints")
+    else:
+        svc2 = SweepService.restore(cfg, root, step=steps[len(steps) // 2])
+        try:
+            futs = svc2.futures
+            svc2.drain(timeout=timeout)
+            for seq, f in futs.items():
+                lane = report.seq_lane[seq]
+                restored_lanes += 1
+                try:
+                    r = f.result(timeout=10)
+                except DeadlineError as e:
+                    if lane != dl_lane or e.result.cycles != deadline:
+                        failures.append(
+                            f"restored lane {lane} bad deadline outcome")
+                except Exception as e:   # noqa: BLE001 — gate, report all
+                    failures.append(f"restored lane {lane} failed: {e}")
+                else:
+                    if not results_bit_identical(r, reference[lane]):
+                        failures.append(f"restored lane {lane} drifted")
+        finally:
+            svc2.shutdown()
+
+    record = dict(
+        seed=seed, n_lanes=len(lanes), chunk=chunk,
+        deadline_lane=dl_lane, deadline_cycles=deadline,
+        fired=[list(f) for f in report.fired],
+        n_retries=report.stats["n_retries"],
+        n_restarts=report.stats["n_restarts"],
+        n_checkpoints=report.stats["n_checkpoints"],
+        n_deadline_failures=report.stats["n_deadline_failures"],
+        refill_occupancy=round(report.stats["occupancy_sum"]
+                               / max(1, report.stats["n_slices"]), 4),
+        dead_step_fraction=round(report.telemetry.dead_step_fraction, 4),
+        restored_lanes=restored_lanes,
+        soak_s=round(soak_s, 2),
+        failures=failures,
+    )
+    if verbose:
+        print(json.dumps(record, indent=2))
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="seeded chaos soak of the sweep service, "
+                    "bit-identity gated")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fault-schedule + traffic-order seed")
+    ap.add_argument("--copies", type=int, default=2,
+                    help="fig17-smoke traffic copies (oversubscription)")
+    ap.add_argument("--transients", type=int, default=2)
+    ap.add_argument("--kills", type=int, default=1)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="engine chunk: smaller => more slices => more "
+                         "fault-landing opportunities")
+    ap.add_argument("--timeout", type=float, default=900.0)
+    args = ap.parse_args()
+    record = run(args.seed, copies=args.copies,
+                 n_transients=args.transients, n_kills=args.kills,
+                 chunk=args.chunk, timeout=args.timeout)
+    if record["failures"]:
+        print(f"CHAOS SOAK FAILED ({len(record['failures'])} violation(s))",
+              file=sys.stderr)
+        return 1
+    print("chaos soak passed: every surviving lane bit-identical, "
+          "deadline + restore exact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -101,7 +101,10 @@ def list_steps(root: str) -> list[int]:
     for name in os.listdir(root):
         if name.startswith("step_") and not name.endswith(".tmp") and \
                 os.path.exists(os.path.join(root, name, _MARKER)):
-            out.append(int(name[len("step_"):]))
+            try:
+                out.append(int(name[len("step_"):]))
+            except ValueError:
+                continue   # stray step_* entry that isn't a checkpoint
     return sorted(out)
 
 

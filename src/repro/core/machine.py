@@ -1110,11 +1110,20 @@ class RunResult:
 # arguments — the single underlying XLA executable.
 _ENGINE_CACHE: dict = {}
 
-# "run to completion" cycle budget for the engine's traced per-sub-lane
+# "run to completion" cycle budget for the engine's traced per-PE
 # bound (np.int32 so every caller — run_many and the sliced sweep service
 # — hits the same int32 specialization of the jitted engine; max_cycles
 # always caps first).
 ENGINE_UNBOUNDED = np.int32(np.iinfo(np.int32).max)
+
+
+def unbounded_budget(batch: int, n_pes: int) -> np.ndarray:
+    """A ``(B, N)`` engine budget that never halts anything: every PE may
+    retire up to INT32_MAX cycles this call (``cfg.max_cycles`` always
+    caps first).  The engine's budget argument is per-PE so callers can
+    bound individual (sub-)lanes — a deadline — while co-tenants keep
+    stepping; this helper is the 'no deadlines' value."""
+    return np.full((batch, n_pes), ENGINE_UNBOUNDED, np.int32)
 
 
 def _engine_key_cfg(cfg: MachineConfig) -> MachineConfig:
@@ -1194,20 +1203,23 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
     terminating when every lane is idle (or capped, or a lane trips the
     pending-FIFO guard).
 
-    ``budget`` is a *traced* int32 bound on the number of simulated
-    CYCLES each sub-lane may retire in this call — the wave-resumable
-    hook the sweep service slices time with.  The bound is denominated
-    in cycles (not loop iterations) so that fast-forwarded runs, which
+    ``budget`` is a *traced* (B, N) int32 bound on the number of
+    simulated CYCLES each PE may retire in this call — the
+    wave-resumable hook the sweep service slices time with, and (being
+    per-PE) the per-(sub-)lane deadline mechanism: a lane whose rows
+    carry a smaller budget freezes exactly at that bound while
+    co-tenant rectangles keep stepping.  The bound is denominated in
+    cycles (not loop iterations) so that fast-forwarded runs, which
     retire many cycles per wall tick, account compressed cycles against
-    the same budget as plain runs: a sub-lane whose ``cycle`` counter
-    has advanced ``budget`` cycles past its value at call entry makes NO
+    the same budget as plain runs: a PE whose ``cycle`` counter has
+    advanced ``budget`` cycles past its value at call entry makes NO
     further state transition this call (its tick is an exact no-op, see
     :func:`_make_cycle`'s ``halt``).  Running the engine twice with
     budget b then b' is therefore bit-identical to one call with b + b':
     the loop carry is the machine state itself.  ``run_many`` passes
-    :data:`ENGINE_UNBOUNDED` (INT32_MAX) to run to completion (the
-    ``max_cycles`` cap fires first); being traced, the bound costs no
-    recompile either way.  Freezing is per *sub-lane*: a sub-lane (the
+    :func:`unbounded_budget` (INT32_MAX everywhere) to run to completion
+    (the ``max_cycles`` cap fires first); being traced, the bound costs
+    no recompile either way.  Freezing is per *sub-lane*: a sub-lane (the
     whole lane, when unpacked) that reaches idle stops advancing its PEs'
     cycle counters and stats while co-tenant sub-meshes keep stepping —
     so per-(sub-)lane metrics match a solo :func:`run` exactly.
@@ -1292,7 +1304,8 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
                            st, st2)
             return st2
 
-        return jax.vmap(lane_step, in_axes=(0, 0, 0, 0, 0, 0, None, 0))
+        # budget maps like the state: one (N,) row per lane
+        return jax.vmap(lane_step, in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
 
     step = make_step(False)
     step_ff = make_step(True) if ffwd is not None else None
@@ -1368,11 +1381,11 @@ def _get_engine(cfg: MachineConfig, chunk: int, n_max: int | None = None,
         spec = PartitionSpec("lanes")
         # A single spec per argument/result acts as a pytree prefix, so
         # every MachineState leaf splits on its leading lane axis too.
-        # The budget scalar is replicated: every device runs the same
-        # number of chunk iterations at most (its own lanes may idle
-        # earlier, exactly like the unsharded engine).
+        # The (B, N) budget splits with its lanes: each device bounds
+        # its own shard's PEs (its lanes may idle or exhaust their
+        # budgets earlier, exactly like the unsharded engine).
         engine_fn = shard_map_unchecked(
-            engine_fn, mesh, in_specs=(spec,) * 6 + (PartitionSpec(),),
+            engine_fn, mesh, in_specs=(spec,) * 7,
             out_specs=(spec, spec, spec, spec))
     engine = jax.jit(engine_fn, donate_argnums=5)
 
@@ -1420,12 +1433,32 @@ def _host_stats(st: MachineState) -> dict:
     )
 
 
+def _validate_deadlines(deadlines, n: int) -> list:
+    """Normalize a per-lane deadline sequence: length n, entries None or
+    a positive cycle count (int32 range)."""
+    dls = list(deadlines)
+    if len(dls) != n:
+        raise ValueError(f"{len(dls)} deadlines for {n} lanes")
+    out = []
+    for i, d in enumerate(dls):
+        if d is None:
+            out.append(None)
+            continue
+        d = int(d)
+        if not 0 < d <= int(ENGINE_UNBOUNDED):
+            raise ValueError(f"deadline[{i}]={d}: expected a positive "
+                             "int32 cycle count (or None)")
+        out.append(d)
+    return out
+
+
 def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
                    chunk: int = 512, pack: bool = False,
                    super_geom=None, pack_stats: dict | None = None,
                    shard: bool = False, cycle_hints=None,
                    shard_stats: dict | None = None,
-                   telemetry: dict | None = None
+                   telemetry: dict | None = None,
+                   deadlines=None
                    ) -> list[RunResult]:
     """Simulate B workloads in a single batched on-device run.
 
@@ -1489,6 +1522,14 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
       shard_stats: optional dict that ``shard=True`` fills with
         ``n_devices`` / ``lanes_per_device`` / ``n_pad_lanes`` and the
         per-device lane ``plan``.
+      deadlines: optional per-input-lane cycle deadlines (None entries =
+        unbounded).  A lane with a deadline makes NO state transition
+        past that many simulated cycles: it comes back frozen exactly at
+        the bound with ``completed=False`` (cycle counters, statistics
+        and the budget-halt gate are the engine's exact slicing
+        semantics, so the frozen state is bit-identical to what a
+        budget-sliced run would hold there).  Co-tenant sub-lanes and
+        other lanes are unaffected — the budget is per-PE.
       telemetry: optional dict accumulating engine-efficiency counters
         across every engine call this run makes (one per wave under
         ``pack=True``): ``stepped_pe_ticks`` (wall PE-steps executed),
@@ -1525,6 +1566,8 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
             raise ValueError("pack=True places lanes itself; per-lane "
                              "geoms cannot be overridden")
         wls = list(workloads)
+        if deadlines is not None:
+            deadlines = _validate_deadlines(deadlines, len(wls))
         if cycle_hints is not None:
             # validate eagerly: the wave planner's homogeneous-batch
             # shortcut can skip shard_loads, and the per-wave hint
@@ -1577,11 +1620,16 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
                         hints_w[p.super_lane],
                         float(cycle_hints[wave[p.lane]]))
             ws: dict | None = {} if shard_stats is not None else None
+            # per-wave deadlines, in the wave's own lane order — the
+            # inner (packed) call maps them onto sub-lane PE rows below
+            dls_w = (None if deadlines is None
+                     else [deadlines[i] for i in wave])
             try:
                 wave_res = _run_many_impl(cfg, wb, chunk=chunk, shard=shard,
                                           cycle_hints=hints_w,
                                           shard_stats=ws,
-                                          telemetry=telemetry)
+                                          telemetry=telemetry,
+                                          deadlines=dls_w)
             except RuntimeError as e:
                 supers = getattr(e, "lanes", None)
                 if supers is None:
@@ -1682,6 +1730,27 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
         from repro.core.batch import validate_hints
         cycle_hints = validate_hints(cycle_hints, workloads.batch)
 
+    # --- per-PE cycle budget (deadlines) ------------------------------
+    # The engine's budget argument is (B, N) int32: INT32_MAX everywhere
+    # by default, a lane's own deadline on its rows otherwise.  Packed
+    # batches map each deadline onto its sub-lane rectangle, so a
+    # deadline-frozen sub-lane never stalls its co-tenants.
+    budget = unbounded_budget(workloads.batch, n_max)
+    if deadlines is not None:
+        if workloads.plan is not None:
+            deadlines = _validate_deadlines(
+                deadlines, len(workloads.plan.placements))
+            for sub in workloads.plan.placements:
+                dl = deadlines[sub.lane]
+                if dl is not None:
+                    w_sup = workloads.plan.super_geoms[sub.super_lane][0]
+                    budget[sub.super_lane, sub.pe_ids(w_sup)] = dl
+        else:
+            deadlines = _validate_deadlines(deadlines, workloads.batch)
+            for b, dl in enumerate(deadlines):
+                if dl is not None:
+                    budget[b, :] = dl
+
     # --- lane-axis device sharding ------------------------------------
     # Lanes never interact, so the batch shards freely over devices: the
     # plan balances real lanes by runtime estimate, the lane arrays are
@@ -1748,7 +1817,8 @@ def _run_many_impl(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
         lanes(lane_geoms, pad_row=np.array([1, 1], np.int32)),
         lanes(sub_ids),
         lanes(local_ids, pad_row=np.arange(n_max, dtype=np.int32)), st,
-        ENGINE_UNBOUNDED)
+        lanes(budget, pad_row=np.full((n_max,), int(ENGINE_UNBOUNDED),
+                                      np.int32)))
     if telemetry is not None:
         # dead-step accounting (device order; ticks is uniform per device
         # shard): wall PE-steps actually executed vs what the plain
@@ -1808,7 +1878,8 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
              chunk: int = 512, pack: bool = False,
              super_geom=None, pack_stats: dict | None = None,
              shard: bool = False, cycle_hints=None,
-             shard_stats: dict | None = None
+             shard_stats: dict | None = None,
+             deadlines=None
              ) -> list[RunResult]:
     """Simulate B workloads in a single batched on-device run.
 
@@ -1837,7 +1908,8 @@ def run_many(cfg: MachineConfig, workloads, *, modes=None, geoms=None,
     return _run_many_impl(cfg, workloads, modes=modes, geoms=geoms,
                           chunk=chunk, pack=pack, super_geom=super_geom,
                           pack_stats=pack_stats, shard=shard,
-                          cycle_hints=cycle_hints, shard_stats=shard_stats)
+                          cycle_hints=cycle_hints, shard_stats=shard_stats,
+                          deadlines=deadlines)
 
 
 def run(cfg: MachineConfig, prog: np.ndarray, static_ams: np.ndarray,

@@ -44,6 +44,12 @@ class SweepRequest:
     * ``modes`` / ``geoms`` / ``cycle_hints`` — optional per-lane mode
       names or bitmasks, ``(width, height)`` meshes, and measured-cycle
       runtime hints.
+    * ``deadlines`` — optional per-lane cycle deadlines (None entries =
+      unbounded).  A deadlined lane makes no state transition past its
+      bound: it reports ``completed=False`` frozen exactly at the
+      deadline while every other lane (co-tenant sub-lanes included)
+      runs to completion — the runaway-lane watchdog of the batched
+      surface.
     * ``pack`` / ``super_geom`` — sub-mesh lane packing into shared
       super-lanes (``geoms`` must then be None: the packer places lanes).
     * ``shard`` — lane-axis device sharding over ``jax.devices()``.
@@ -68,6 +74,7 @@ class SweepRequest:
     shard: bool = False
     chunk: int = 512
     validate: str = "static"
+    deadlines: tuple | None = None
 
     def __post_init__(self):
         from repro.core.batch import BatchedWorkloads
@@ -76,10 +83,17 @@ class SweepRequest:
             if not wls:
                 raise ValueError("SweepRequest needs at least one workload")
             object.__setattr__(self, "workloads", wls)
-        for f in ("modes", "geoms", "cycle_hints"):
+        for f in ("modes", "geoms", "cycle_hints", "deadlines"):
             v = getattr(self, f)
             if v is not None:
                 object.__setattr__(self, f, tuple(v))
+        if self.deadlines is not None:
+            # fail the request at construction, not deep inside the
+            # engine-call plumbing with an opaque shape error
+            object.__setattr__(
+                self, "deadlines",
+                tuple(machine._validate_deadlines(self.deadlines,
+                                                  self.n_lanes)))
         if self.super_geom is not None:
             w, h = self.super_geom
             object.__setattr__(self, "super_geom", (int(w), int(h)))
@@ -257,7 +271,9 @@ def sweep(cfg: MachineConfig, request: SweepRequest) -> SweepReport:
         shard=request.shard,
         cycle_hints=(None if request.cycle_hints is None
                      else list(request.cycle_hints)),
-        shard_stats=ss, telemetry=tm)
+        shard_stats=ss, telemetry=tm,
+        deadlines=(None if request.deadlines is None
+                   else list(request.deadlines)))
     pack = None if ps is None else PackStats(
         n_waves=ps["n_waves"], n_super_lanes=ps["n_super_lanes"],
         packing_efficiency=ps["packing_efficiency"],

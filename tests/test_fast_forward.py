@@ -209,14 +209,19 @@ def test_budget_b_then_bprime_equals_one_call(fast_forward):
 
     # b1 deliberately NOT chunk-aligned, and small enough that the chain
     # is mid-flight (mid-compression, on the ff engine) at the cut.
-    b1, b2 = np.int32(37), np.int32(200)
-    st_a, _, _, _ = eng(*base[:5], base[5], b1)
+    # (budgets are (B, N) per-PE since the deadline mechanism landed —
+    # a uniform fill reproduces the old scalar semantics exactly)
+    def bud(v):
+        return np.full((1, n), v, np.int32)
+
+    b1, b2 = 37, 200
+    st_a, _, _, _ = eng(*base[:5], base[5], bud(b1))
     cyc_a = int(np.asarray(st_a.cycle).max())
     assert cyc_a <= 37, "a slice never retires more cycles than its budget"
-    st_a, over_a, idle_a, _ = eng(*base[:5], st_a, b2)
+    st_a, over_a, idle_a, _ = eng(*base[:5], st_a, bud(b2))
 
     base_b = _engine_args(cfg, wl, n)     # st is donated: rebuild fresh
-    st_b, over_b, idle_b, _ = eng(*base_b[:5], base_b[5], b1 + b2)
+    st_b, over_b, idle_b, _ = eng(*base_b[:5], base_b[5], bud(b1 + b2))
 
     for la, lb in zip(jax.tree_util.tree_leaves(st_a),
                       jax.tree_util.tree_leaves(st_b)):
@@ -228,12 +233,13 @@ def test_budget_b_then_bprime_equals_one_call(fast_forward):
     base_c = _engine_args(cfg, wl, n)
     st_c = base_c[5]
     for _ in range(200):
-        st_c, _, idle_c, _ = eng(*base_c[:5], st_c, np.int32(97))
+        st_c, _, idle_c, _ = eng(*base_c[:5], st_c, bud(97))
         if bool(np.asarray(idle_c).all()):
             break
     assert bool(np.asarray(idle_c).all()), "sliced run never went idle"
     base_d = _engine_args(cfg, wl, n)
-    st_d, _, _, _ = eng(*base_d[:5], base_d[5], machine.ENGINE_UNBOUNDED)
+    st_d, _, _, _ = eng(*base_d[:5], base_d[5],
+                        machine.unbounded_budget(1, n))
     for lc, ld in zip(jax.tree_util.tree_leaves(st_c),
                       jax.tree_util.tree_leaves(st_d)):
         np.testing.assert_array_equal(np.asarray(lc), np.asarray(ld))

@@ -126,3 +126,39 @@ def test_pack_report_plan_round_trips(mixed):
     placed = sum(len(w["lanes"]) for w in pk.plan)
     assert placed == len(mixed)
     json.dumps(pk.to_json())
+
+
+# ----------------------------------------------------------------------
+# per-lane deadlines on the request surface
+# ----------------------------------------------------------------------
+def test_request_deadlines_freeze_and_validate(mixed):
+    req = SweepRequest(workloads=mixed, deadlines=[None, 10, None])
+    assert req.deadlines == (None, 10, None)
+    with pytest.raises(ValueError, match="deadlines"):
+        SweepRequest(workloads=mixed, deadlines=[10])      # wrong length
+    with pytest.raises(ValueError, match="deadline"):
+        SweepRequest(workloads=mixed, deadlines=[0, None, None])
+    with pytest.raises(ValueError, match="deadline"):
+        SweepRequest(workloads=mixed, deadlines=[-5, None, None])
+
+
+def test_sweep_deadline_freezes_only_its_lane(mixed):
+    """A deadlined lane reports completed=False frozen EXACTLY at the
+    bound; the other lanes match the unbounded sweep bit-for-bit —
+    per-lane budgets, not a service-wide cliff."""
+    free = sweep(_cfg(), SweepRequest(workloads=mixed))
+    victim = max(range(3), key=lambda i: free[i].cycles)
+    dl = max(1, free[victim].cycles // 2)
+    dls = [dl if i == victim else None for i in range(3)]
+    rep = sweep(_cfg(), SweepRequest(workloads=mixed, deadlines=dls))
+    assert rep[victim].cycles == dl and not rep[victim].completed
+    for i in range(3):
+        if i != victim:
+            assert _sig(rep[i]) == _sig(free[i]), f"lane {i}"
+    # packed path: same freeze, co-tenant sub-lanes unaffected
+    packed = sweep(_cfg(), SweepRequest(workloads=mixed, pack=True,
+                                        deadlines=dls))
+    assert packed[victim].cycles == dl and not packed[victim].completed
+    for i in range(3):
+        if i != victim:
+            assert _sig(packed[i]) == _sig(free[i]), f"packed lane {i}"

@@ -249,3 +249,68 @@ def test_service_sharded_soak(traffic, reference, n_devices):
             _assert_same(f.result(), w, f"sharded lane {i}")
         assert machine.engine_cache_size() == 1
         assert svc.stats["n_refills"] > 0
+
+
+# ----------------------------------------------------------------------
+# robustness satellites: drain diagnostics + capacity under shard
+# ----------------------------------------------------------------------
+def test_drain_timeout_carries_diagnostics(traffic, reference):
+    """A timed-out drain names what is stuck: pending/resident lane
+    counts, the oldest ticket's age, and the refill occupancy."""
+    from repro.serve.chaos import BlockingHook
+    lanes, modes = traffic
+    hook = BlockingHook("pre_slice")
+    svc = SweepService(_cfg(), template=lanes, n_supers=2,
+                       fault_hook=hook)
+    try:
+        futs = [svc.submit(w, mode=m)
+                for w, m in zip(lanes[:3], modes[:3])]
+        assert hook.entered.wait(timeout=60)
+        with pytest.raises(TimeoutError) as ei:
+            svc.drain(timeout=0.3)
+        msg = str(ei.value)
+        assert "pending lane(s)" in msg and "resident lane(s)" in msg
+        assert "oldest ticket age" in msg and "refill_occupancy" in msg
+        # the parked lanes are recoverable, not poisoned
+        hook.release()
+        svc.drain(timeout=600)
+        for i, f in enumerate(futs):
+            _assert_same(f.result(timeout=5), reference[i],
+                         f"post-timeout lane {i}")
+    finally:
+        svc.shutdown()
+
+
+def test_capacity_error_in_admit_under_shard(traffic, reference):
+    """A lane that can never fit the (explicit) super-mesh, arriving in
+    the arena-building first batch of a sharded service: ITS future
+    fails with CapacityError, co-tenant lanes on all devices complete
+    bit-identically, and the service accepts later submissions.
+
+    Runs single-device everywhere; the multidevice CI job re-runs this
+    file with 4 forced host devices, where shard=True really splits the
+    super-lane axis.
+    """
+    lanes, modes = traffic
+    big = compiler.build_spmv(
+        compiler.random_sparse(6, 6, 0.4, np.random.default_rng(3)),
+        np.arange(6), _cfg(6, 6))
+    svc = SweepService(_cfg(), super_geom=(4, 4), n_supers=4, shard=True)
+    try:
+        # no template: the arena is sized lazily by this very batch, so
+        # the oversize lane reaches _admit (submit cannot pre-check an
+        # arena that does not exist yet) and must fail THERE.
+        doomed = svc.submit(big, mode="nexus")
+        futs = [svc.submit(w, mode=m) for w, m in zip(lanes, modes)]
+        svc.drain(timeout=600)
+        with pytest.raises(CapacityError, match="exceeds"):
+            doomed.result(timeout=5)
+        for i, f in enumerate(futs):
+            _assert_same(f.result(timeout=5), reference[i],
+                         f"sharded co-tenant lane {i}")
+        # still healthy for later traffic
+        late = svc.submit(lanes[0], mode=modes[0])
+        svc.drain(timeout=600)
+        _assert_same(late.result(timeout=5), reference[0], "late lane")
+    finally:
+        svc.shutdown()
